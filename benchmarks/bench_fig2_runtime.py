@@ -1,0 +1,43 @@
+"""Paper Figure 2: runtime of PAA / FFT / PCA-via-SVD, normalized to PAA.
+Claim: PCA is ~50x slower than PAA, ~8x slower than FFT (motivates DROP)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.harness import Row, suite, timed
+from repro.baselines.fft import fft_real_expansion
+from repro.baselines.paa import paa_transform
+from repro.core.pca import pca_fit_svd
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    ratios_pca, ratios_fft = [], []
+    for name, (x, _) in suite(full).items():
+        t_paa, _ = timed(paa_transform, x, max(x.shape[1] // 8, 1))
+        t_fft, _ = timed(fft_real_expansion, x)
+        xs = jnp.asarray(x)
+        t_pca, _ = timed(
+            lambda a: pca_fit_svd(a)[1].block_until_ready(), xs
+        )
+        ratios_pca.append(t_pca / t_paa)
+        ratios_fft.append(t_fft / t_paa)
+        rows.append(
+            Row(
+                f"fig2/{name}",
+                t_pca * 1e6,
+                f"pca_over_paa={t_pca/t_paa:.1f}x;fft_over_paa={t_fft/t_paa:.1f}x",
+            )
+        )
+    rows.append(
+        Row(
+            "fig2/AVG",
+            0.0,
+            f"pca_over_paa={np.mean(ratios_pca):.1f}x;"
+            f"fft_over_paa={np.mean(ratios_fft):.1f}x"
+            " (paper: pca ~52x paa, ~8x fft)",
+        )
+    )
+    return rows

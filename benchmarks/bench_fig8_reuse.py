@@ -1,0 +1,39 @@
+"""Paper Figure 8: effect of work-reuse (importance sampling) percentage on
+DROP runtime and output dimension. Claim: ~10% reuse helps slightly; heavy
+reuse hurts (worst-fit points get oversampled)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.harness import Row, suite, timed
+from repro.core import DropConfig, drop
+from repro.core.cost import knn_cost
+
+FRACTIONS = (0.0, 0.1, 0.3, 0.6)
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    per_frac: dict[float, list[float]] = {f: [] for f in FRACTIONS}
+    names = list(suite(full).items())[:4]  # a few datasets suffice here
+    for name, (x, _) in names:
+        cost = knn_cost(x.shape[0])
+        base = None
+        for frac in FRACTIONS:
+            cfg = DropConfig(target_tlb=0.98, reuse_fraction=frac, seed=0)
+            t, r = timed(lambda c=cfg: drop(x, c, cost=cost))
+            if base is None:
+                base = t
+            per_frac[frac].append(t / base)
+            rows.append(
+                Row(f"fig8/{name}/reuse{int(frac*100)}", t * 1e6,
+                    f"k={r.k};rel_time={t/base:.3f}")
+            )
+    for f in FRACTIONS:
+        rows.append(
+            Row(f"fig8/AVG/reuse{int(f*100)}", 0.0,
+                f"rel_time={np.mean(per_frac[f]):.3f} (paper: ~10% reuse "
+                "mildly helps; excessive reuse slows)")
+        )
+    return rows

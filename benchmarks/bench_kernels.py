@@ -1,0 +1,51 @@
+"""Kernel-layer microbenchmarks: DROP's hot operators.
+
+On this CPU container the production path is the jnp oracle (the Pallas
+kernels target TPU; they are validated in interpret mode by tests/). This
+bench times the jitted oracle path at DROP-realistic shapes and reports the
+arithmetic intensity each kernel achieves (the quantity the Pallas BlockSpec
+tiling is designed around)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.harness import Row, timed
+from repro.kernels.center_gram.ref import center_gram_ref
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.pairwise_tlb.ref import pairwise_tlb_ref
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # Halko power-iteration matmul: (m, d) x (d, k+p)
+    m, d, k = (16384, 1024, 69) if full else (4096, 512, 37)
+    a = jax.random.normal(key, (m, d), jnp.float32)
+    b = jax.random.normal(key, (d, k), jnp.float32)
+    f = jax.jit(matmul_ref)
+    t, _ = timed(lambda: f(a, b).block_until_ready(), iters=3)
+    flops = 2 * m * d * k
+    rows.append(Row("kernel/matmul_halko", t * 1e6,
+                    f"gflops={flops/t/1e9:.1f};shape={m}x{d}x{k}"))
+
+    # pairwise TLB: P pairs x (d -> kmax prefix table)
+    p, kmax = (1024, 512) if full else (512, 256)
+    xi = jax.random.normal(key, (p, d), jnp.float32)
+    xj = jax.random.normal(key, (p, d), jnp.float32)
+    v = jnp.linalg.qr(jax.random.normal(key, (d, d)))[0][:, :kmax]
+    g = jax.jit(pairwise_tlb_ref)
+    t, _ = timed(lambda: g(xi, xj, v).block_until_ready(), iters=3)
+    rows.append(Row("kernel/pairwise_tlb", t * 1e6,
+                    f"pairs={p};d={d};kmax={kmax};"
+                    f"gflops={2*p*d*kmax/t/1e9:.1f}"))
+
+    # fused center+gram: (m, d) -> (d, d)
+    x = jax.random.normal(key, (m, d), jnp.float32)
+    h = jax.jit(center_gram_ref)
+    t, _ = timed(lambda: h(x).block_until_ready(), iters=3)
+    rows.append(Row("kernel/center_gram", t * 1e6,
+                    f"gflops={2*m*d*d/t/1e9:.1f};shape={m}x{d}"))
+    return rows

@@ -1,0 +1,43 @@
+"""LM-framework roofline table: reads the dry-run artifacts (launch/dryrun.py)
+and emits the per-(arch x shape x mesh) three-term roofline — the §Roofline
+deliverable in tabular form."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.harness import Row
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    if not os.path.isdir(ART):
+        return [Row("roofline/NONE", 0.0,
+                    "no dry-run artifacts; run python -m repro.launch.dryrun --all")]
+    for fname in sorted(os.listdir(ART)):
+        if not fname.endswith(".json"):
+            continue
+        with open(os.path.join(ART, fname)) as f:
+            rec = json.load(f)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            rows.append(Row(name, 0.0, f"SKIP:{rec['skip_reason'][:60]}"))
+            continue
+        if rec["status"] != "ok":
+            rows.append(Row(name, 0.0, f"ERROR:{rec.get('error','')[:80]}"))
+            continue
+        r = rec["roofline"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(
+            Row(
+                name,
+                step_s * 1e6,
+                f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+                f"collective={r['collective_s']:.4f}s;dom={r['dominant']};"
+                f"useful={r['useful_ratio']:.3f}",
+            )
+        )
+    return rows

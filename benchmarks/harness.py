@@ -1,0 +1,47 @@
+"""Shared benchmark harness: timing, CSV emission, dataset sizing.
+
+Conventions:
+* every benchmark module exposes ``run(full: bool) -> list[Row]``;
+* timing excludes jit compilation (one warm-up call), matching the paper's
+  exclusion of data loading/parsing;
+* rows print as ``name,us_per_call,derived`` CSV (required by run.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str  # free-form metric, e.g. "k=7;tlb=0.985;speedup=12.3"
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 1, **kw):
+    """(best_seconds, result). Warm-up runs compile; best-of-iters timed."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def suite(full: bool, n_small: int = 6):
+    """UCR-like datasets for benchmarks: a subset by default, all when --full.
+    Rows capped on the small path so the whole suite stays CI-sized."""
+    from repro.data.timeseries import ucr_like_suite
+
+    if full:
+        return ucr_like_suite()
+    return ucr_like_suite(max_datasets=n_small, max_m=2500)

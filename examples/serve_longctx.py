@@ -1,0 +1,102 @@
+"""Serving example: batched generation with KV cache + DROP KV compression.
+
+Runs a reduced llama-family model through the Engine (prefill + greedy
+decode), then demonstrates the beyond-paper DROP KV-cache compression: a
+PCA basis discovered from sampled keys lets decode attention run in r < hd
+dims with bounded score distortion.
+
+    PYTHONPATH=src python examples/serve_longctx.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import init_model
+from repro.serve.engine import Engine
+from repro.serve.kv_compress import (
+    KVCompressConfig,
+    compress_cache_layer,
+    decode_attention_compressed,
+    discover_kv_basis,
+)
+from repro.models.attention import decode_attention
+from repro.sharding.specs import ShardCtx
+
+
+def main() -> None:
+    cfg = get_smoke_config("tinyllama_1_1b")
+    ctx = ShardCtx(mesh=None)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+
+    # --- batched serving through the engine ---
+    b, prompt_len, max_new = 4, 12, 8
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(b, prompt_len))
+    eng = Engine(params, cfg, ctx, batch=b, context_len=prompt_len + max_new)
+    res = eng.generate(prompts, max_new=max_new)
+    print(f"generated {res.tokens.shape[1]} tokens for batch {b}:")
+    print(res.tokens)
+
+    # --- DROP KV compression on the accumulated cache ---
+    k_cache = np.asarray(eng.cache["attn"]["k"][0], np.float32)  # layer 0
+    v_cache = np.asarray(eng.cache["attn"]["v"][0], np.float32)
+    hd = cfg.head_dim
+    rows_k = k_cache.reshape(-1, hd)
+    rows_v = v_cache.reshape(-1, hd)
+    kc = KVCompressConfig()  # default 0.98: keys punish sub-rank bases
+    basis_k = discover_kv_basis(rows_k, kc, seed=0)
+    basis_v = discover_kv_basis(rows_v, kc, seed=1)
+    print(f"\nDROP KV bases: head_dim={hd} -> rank_k={basis_k.shape[1]}, "
+          f"rank_v={basis_v.shape[1]} "
+          f"(cache bytes x{basis_k.shape[1]/hd:.2f})")
+
+    # verify decode attention in the compressed space tracks the exact one
+    t = k_cache.shape[1]
+    q = jax.random.normal(jax.random.PRNGKey(2),
+                          (b, 1, cfg.num_kv_heads,
+                           cfg.num_heads // cfg.num_kv_heads, hd))
+    valid = jnp.ones((b, t), bool)
+    exact = decode_attention(q, jnp.asarray(k_cache), jnp.asarray(v_cache),
+                             length_mask=valid)
+    ck, cv = compress_cache_layer(
+        jnp.asarray(k_cache), jnp.asarray(v_cache),
+        jnp.asarray(basis_k), jnp.asarray(basis_v),
+    )
+    approx = decode_attention_compressed(
+        q, ck, cv, jnp.asarray(basis_k), jnp.asarray(basis_v), valid
+    )
+    err = float(jnp.linalg.norm(exact - approx) / jnp.linalg.norm(exact))
+    print(f"compressed-decode relative error: {err:.4f} "
+          f"(TLB target {kc.target_tlb})")
+    print("note: RANDOM-INIT weights produce nearly isotropic keys "
+          "(rank ~= head_dim); trained models' keys are structured — "
+          "the regime below:")
+
+    # --- the trained-model regime: structured (low-rank) keys ---
+    rng = np.random.default_rng(0)
+    b2, t2, kvh = 4, 256, cfg.num_kv_heads
+    factors = rng.normal(size=(b2 * t2 * kvh, 4)).astype(np.float32)
+    k_s = (factors @ rng.normal(size=(4, hd)).astype(np.float32)
+           + 0.02 * rng.normal(size=(b2 * t2 * kvh, hd)).astype(np.float32))
+    v_s = (factors @ rng.normal(size=(4, hd)).astype(np.float32)
+           + 0.02 * rng.normal(size=(b2 * t2 * kvh, hd)).astype(np.float32))
+    bk = discover_kv_basis(k_s, kc, seed=2)
+    bv = discover_kv_basis(v_s, kc, seed=3)
+    ks4 = jnp.asarray(k_s.reshape(b2, t2, kvh, hd))
+    vs4 = jnp.asarray(v_s.reshape(b2, t2, kvh, hd))
+    ck2, cv2 = compress_cache_layer(ks4, vs4, jnp.asarray(bk), jnp.asarray(bv))
+    q2 = jax.random.normal(jax.random.PRNGKey(5),
+                           (b2, 1, kvh, cfg.num_heads // kvh, hd))
+    valid2 = jnp.ones((b2, t2), bool)
+    exact2 = decode_attention(q2, ks4, vs4, length_mask=valid2)
+    approx2 = decode_attention_compressed(
+        q2, ck2, cv2, jnp.asarray(bk), jnp.asarray(bv), valid2)
+    err2 = float(jnp.linalg.norm(exact2 - approx2) / jnp.linalg.norm(exact2))
+    print(f"structured keys: head_dim={hd} -> rank {bk.shape[1]} "
+          f"(cache bytes x{bk.shape[1]/hd:.2f}), rel err {err2:.4f}")
+
+
+if __name__ == "__main__":
+    main()

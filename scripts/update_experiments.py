@@ -1,0 +1,62 @@
+"""Regenerate the §Roofline-table section of EXPERIMENTS.md from the dry-run
+artifacts.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+MARK = "## §Roofline-table (regenerated after optimizations)"
+
+
+def table() -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful | MODEL_TF | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for f in sorted(os.listdir(ART)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(ART, f)))
+        if r["status"] == "skipped":
+            skips.append(f"{r['arch']} x {r['shape']} x {r['mesh']}: "
+                         f"{r['skip_reason']}")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r.get('error','')[:60]} |||||||")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {rf['useful_ratio']:.3f} | {rf['model_flops_total']/1e12:.1f} "
+            f"| {r.get('suggestion','')[:80]} |"
+        )
+    out = "\n".join(lines)
+    out += "\n\nSkipped cells (documented, DESIGN.md §6):\n"
+    out += "\n".join(f"* {s}" for s in skips)
+    return out
+
+
+def main() -> None:
+    with open(EXP) as f:
+        text = f.read()
+    head = text.split(MARK)[0]
+    with open(EXP, "w") as f:
+        f.write(head + MARK + "\n\n" + table() + "\n")
+    print("EXPERIMENTS.md roofline table regenerated "
+          f"({len(os.listdir(ART))} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

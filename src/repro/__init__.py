@@ -1,0 +1,15 @@
+"""repro — production-grade JAX reproduction of DROP (Suri & Bailis, 2017).
+
+DROP: Dimensionality Reduction Optimization for Time Series.
+
+Public API:
+    repro.core            -- the DROP optimizer (paper Algorithm 2)
+    repro.baselines       -- PAA / FFT / full-SVD PCA / JL baselines
+    repro.analytics       -- downstream k-NN / DBSCAN / KDE operators
+    repro.data            -- synthetic UCR-like time series + LM token pipeline
+    repro.models          -- the 10 assigned LM-family architectures
+    repro.train, .serve   -- distributed training & serving substrate
+    repro.launch          -- production mesh + multi-pod dry-run
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Downstream analytics operators (pure JAX/numpy): k-NN retrieval, DBSCAN
+clustering, kernel density estimation — the pipelines DROP pre-processes."""
+
+from repro.analytics.dbscan import dbscan  # noqa: F401
+from repro.analytics.kde import gaussian_kde  # noqa: F401
+from repro.analytics.knn import knn_retrieval_accuracy, nearest_neighbors  # noqa: F401

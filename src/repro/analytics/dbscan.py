@@ -1,0 +1,65 @@
+"""DBSCAN (Ester et al. 1996) — the paper's second end-to-end task (§4.4).
+
+Blocked radius queries (O(m^2 k) distance work, jitted) + host BFS expansion.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NOISE = -1
+UNVISITED = -2
+
+
+@partial(jax.jit, static_argnames=())
+def _radius_block(xq: jax.Array, x: jax.Array, eps2: jax.Array) -> jax.Array:
+    sq_q = jnp.sum(xq * xq, axis=1, keepdims=True)
+    sq_x = jnp.sum(x * x, axis=1)
+    d2 = sq_q + sq_x[None, :] - 2.0 * xq @ x.T
+    return d2 <= eps2
+
+
+def _neighbor_lists(x: np.ndarray, eps: float, block: int = 1024) -> list[np.ndarray]:
+    xs = jnp.asarray(x, dtype=jnp.float32)
+    eps2 = jnp.float32(eps * eps)
+    m = x.shape[0]
+    out: list[np.ndarray] = []
+    for a in range(0, m, block):
+        mask = np.asarray(_radius_block(xs[a : a + block], xs, eps2))
+        for r in range(mask.shape[0]):
+            nbrs = np.nonzero(mask[r])[0]
+            out.append(nbrs[nbrs != a + r])
+    return out
+
+
+def dbscan(
+    x: np.ndarray, eps: float = 0.5, min_samples: int = 5, block: int = 1024
+) -> np.ndarray:
+    """Cluster labels per point; -1 = noise."""
+    m = x.shape[0]
+    nbrs = _neighbor_lists(x, eps, block=block)
+    labels = np.full(m, UNVISITED, dtype=np.int64)
+    cluster = 0
+    for p in range(m):
+        if labels[p] != UNVISITED:
+            continue
+        if nbrs[p].size + 1 < min_samples:
+            labels[p] = NOISE
+            continue
+        labels[p] = cluster
+        frontier = list(nbrs[p])
+        while frontier:
+            q = frontier.pop()
+            if labels[q] == NOISE:
+                labels[q] = cluster
+            if labels[q] != UNVISITED:
+                continue
+            labels[q] = cluster
+            if nbrs[q].size + 1 >= min_samples:
+                frontier.extend(nbrs[q])
+        cluster += 1
+    return labels

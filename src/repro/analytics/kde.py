@@ -1,0 +1,32 @@
+"""Gaussian kernel density estimation — a pairwise-distance downstream task
+(mentioned in §1 alongside k-NN/k-Means as TLB-sensitive analytics)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=())
+def _kde_block(xq: jax.Array, x: jax.Array, inv_two_h2: jax.Array) -> jax.Array:
+    sq_q = jnp.sum(xq * xq, axis=1, keepdims=True)
+    sq_x = jnp.sum(x * x, axis=1)
+    d2 = jnp.maximum(sq_q + sq_x[None, :] - 2.0 * xq @ x.T, 0.0)
+    return jnp.mean(jnp.exp(-d2 * inv_two_h2), axis=1)
+
+
+def gaussian_kde(
+    x: np.ndarray, queries: np.ndarray | None = None, bandwidth: float = 1.0,
+    block: int = 1024,
+) -> np.ndarray:
+    """Mean Gaussian kernel density at each query point (unnormalized)."""
+    xs = jnp.asarray(x, dtype=jnp.float32)
+    qs = xs if queries is None else jnp.asarray(queries, dtype=jnp.float32)
+    inv = jnp.float32(1.0 / (2.0 * bandwidth * bandwidth))
+    out = []
+    for a in range(0, qs.shape[0], block):
+        out.append(np.asarray(_kde_block(qs[a : a + block], xs, inv)))
+    return np.concatenate(out)

@@ -1,0 +1,54 @@
+"""Brute-force k-NN retrieval (the paper's end-to-end downstream task, §4.4).
+
+The paper's "2-NN retrieval" = for every point, retrieve its single nearest
+OTHER point (self excluded) and check label agreement. Runtime O(m^2 k) —
+exactly the shape of DROP's default cost model.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _nn_block(xq: jax.Array, x: jax.Array, start: jax.Array, block: int):
+    """Nearest neighbor of each row of xq among rows of x, self excluded."""
+    sq_q = jnp.sum(xq * xq, axis=1, keepdims=True)
+    sq_x = jnp.sum(x * x, axis=1)
+    d2 = sq_q + sq_x[None, :] - 2.0 * xq @ x.T  # (b, m)
+    rows = start + jnp.arange(xq.shape[0])
+    cols = jnp.arange(x.shape[0])
+    d2 = jnp.where(rows[:, None] == cols[None, :], jnp.inf, d2)
+    idx = jnp.argmin(d2, axis=1)
+    return idx, jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+
+
+def nearest_neighbors(x: np.ndarray, block: int = 1024) -> np.ndarray:
+    """Index of the nearest other point for every row (blocked, jitted)."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    m = x.shape[0]
+    out = []
+    for a in range(0, m, block):
+        b = min(a + block, m)
+        xq = x[a:b]
+        if xq.shape[0] < block:  # pad to keep a single compiled shape
+            pad = block - xq.shape[0]
+            xq = jnp.pad(xq, ((0, pad), (0, 0)))
+            idx, _ = _nn_block(xq, x, jnp.int32(a), block)
+            out.append(np.asarray(idx)[: b - a])
+        else:
+            idx, _ = _nn_block(xq, x, jnp.int32(a), block)
+            out.append(np.asarray(idx))
+    return np.concatenate(out)
+
+
+def knn_retrieval_accuracy(
+    x: np.ndarray, labels: np.ndarray, block: int = 1024
+) -> float:
+    """Label agreement rate of 1-NN retrieval (paper Table 2/4 metric)."""
+    nn = nearest_neighbors(x, block=block)
+    return float((labels[nn] == labels).mean())

@@ -1,0 +1,12 @@
+"""Baseline dimensionality reduction operators from the paper's comparison
+(§2.3): PAA, FFT, full-SVD PCA with binary search, JL random projection."""
+
+from repro.baselines.dwt import dwt_transform, dwt_min_k  # noqa: F401
+from repro.baselines.fft import fft_transform, fft_min_k  # noqa: F401
+from repro.baselines.jl import jl_transform  # noqa: F401
+from repro.baselines.paa import paa_transform, paa_min_k  # noqa: F401
+from repro.baselines.svd_pca import (  # noqa: F401
+    pca_min_k,
+    svd_binary_search,
+    svd_halko_binary_search,
+)

@@ -1,0 +1,62 @@
+"""Haar discrete wavelet transform — another baseline from the paper's
+source study (Ding et al. 2008 compared DWT among the eight methods).
+
+The orthonormal Haar transform is an isometry; coefficients ordered
+coarse-to-fine give a NESTED representation (like FFT/PCA prefixes), so
+truncation is contractive and the min-k search is a single prefix pass.
+Inputs are zero-padded to the next power of two (padding preserves L2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tlb import sample_pairs
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def haar_expansion(x: np.ndarray) -> np.ndarray:
+    """(m, d) -> (m, 2^ceil(log2 d)) orthonormal Haar coefficients, ordered
+    [approximation | detail levels coarse -> fine]."""
+    x = np.asarray(x, dtype=np.float64)
+    m, d = x.shape
+    n = _next_pow2(d)
+    buf = np.zeros((m, n), dtype=np.float64)
+    buf[:, :d] = x
+    out_details = []
+    cur = buf
+    while cur.shape[1] > 1:
+        even, odd = cur[:, 0::2], cur[:, 1::2]
+        approx = (even + odd) / np.sqrt(2.0)
+        detail = (even - odd) / np.sqrt(2.0)
+        out_details.append(detail)
+        cur = approx
+    # coarse-to-fine: final approximation, then details from coarsest level
+    cols = [cur] + out_details[::-1]
+    return np.concatenate(cols, axis=1).astype(np.float32)
+
+
+def dwt_transform(x: np.ndarray, k: int) -> np.ndarray:
+    """First k Haar dims (coarsest first)."""
+    return haar_expansion(x)[:, : max(k, 1)]
+
+
+def dwt_min_k(x: np.ndarray, target: float, n_pairs: int = 800,
+              seed: int = 0) -> int:
+    """Smallest k achieving the TLB target (single prefix pass)."""
+    rng = np.random.default_rng(seed)
+    pairs = sample_pairs(x.shape[0], n_pairs, rng)
+    e = haar_expansion(x)
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
+    diff = (e[pairs[:, 0]] - e[pairs[:, 1]]).astype(np.float64)
+    cum = np.cumsum(diff**2, axis=1)
+    tlb_k = np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
+    ok = np.nonzero(tlb_k >= target)[0]
+    return int(ok[0]) + 1 if ok.size else e.shape[1]

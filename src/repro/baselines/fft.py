@@ -1,0 +1,68 @@
+"""Fourier (FFT) dimensionality reduction — paper baseline (Faloutsos et al.).
+
+Orthonormal DFT is an isometry (Parseval), so keeping any subset of
+coefficients is contractive. We expand the rfft of a real series into a REAL
+coefficient vector ordered by frequency:
+
+    [Re X_0, sqrt(2) Re X_1, sqrt(2) Im X_1, sqrt(2) Re X_2, ...,  (Nyquist)]
+
+whose prefix of length k is the k-dim FFT representation; the full expansion
+preserves L2 norms exactly, so prefixes lower-bound distances (TLB <= 1).
+Runtime O(m d log d).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tlb import gaussian_ci, sample_pairs
+
+
+def fft_real_expansion(x: np.ndarray) -> np.ndarray:
+    """(m, d) -> (m, d) real orthonormal Fourier coefficient expansion."""
+    x = np.asarray(x, dtype=np.float64)
+    m, d = x.shape
+    cf = np.fft.rfft(x, axis=1, norm="ortho")  # (m, d//2+1)
+    cols = [cf[:, 0].real]  # DC term (weight 1)
+    n_half = cf.shape[1]
+    for f in range(1, n_half):
+        if d % 2 == 0 and f == n_half - 1:
+            cols.append(cf[:, f].real)  # Nyquist term (weight 1)
+        else:
+            cols.append(np.sqrt(2.0) * cf[:, f].real)
+            cols.append(np.sqrt(2.0) * cf[:, f].imag)
+    out = np.stack(cols, axis=1)[:, :d]
+    return out.astype(np.float32)
+
+
+def fft_transform(x: np.ndarray, k: int) -> np.ndarray:
+    """First k real Fourier dims (lowest frequencies first)."""
+    return fft_real_expansion(x)[:, : max(k, 1)]
+
+
+def fft_min_k(
+    x: np.ndarray, target: float, n_pairs: int = 800, seed: int = 0
+) -> int:
+    """Smallest k achieving the TLB target. Coefficients are nested, so one
+    expansion + prefix cumsum answers every k at once."""
+    rng = np.random.default_rng(seed)
+    pairs = sample_pairs(x.shape[0], n_pairs, rng)
+    e = fft_real_expansion(x)
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    ei, ej = e[pairs[:, 0]], e[pairs[:, 1]]
+    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
+    cum = np.cumsum((ei - ej).astype(np.float64) ** 2, axis=1)
+    tlb_k = np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
+    ok = np.nonzero(tlb_k >= target)[0]
+    return int(ok[0]) + 1 if ok.size else x.shape[1]
+
+
+def fft_tlb_sampled(
+    x: np.ndarray, k: int, pairs: np.ndarray
+) -> tuple[float, float, float]:
+    t = fft_transform(x, k)
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    ti, tj = t[pairs[:, 0]], t[pairs[:, 1]]
+    dx = np.sqrt(np.maximum(((xi - xj) ** 2).sum(-1), 1e-30))
+    dt = np.sqrt(np.maximum(((ti - tj) ** 2).sum(-1), 0.0))
+    return gaussian_ci(np.where(dx > 1e-15, dt / dx, 1.0), 0.95)

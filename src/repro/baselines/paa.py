@@ -1,0 +1,63 @@
+"""Piecewise Aggregate Approximation (Keogh et al. 2001) — paper baseline.
+
+PAA splits each length-d series into k contiguous segments and represents each
+segment by its mean. With per-segment sqrt(length) scaling the transform is
+contractive (Jensen: L * mean^2 <= sum of squares), so TLB <= 1 holds exactly.
+Runtime O(md) — the fastest method in the paper's comparison (Fig. 2).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tlb import gaussian_ci, sample_pairs
+
+
+def _segments(d: int, k: int) -> list[tuple[int, int]]:
+    """k near-equal contiguous segments covering [0, d)."""
+    bounds = np.linspace(0, d, k + 1).round().astype(int)
+    return [(bounds[s], bounds[s + 1]) for s in range(k) if bounds[s + 1] > bounds[s]]
+
+
+def paa_transform(x: np.ndarray, k: int) -> np.ndarray:
+    """(m, d) -> (m, k') lower-bounding PAA representation (k' <= k)."""
+    x = np.asarray(x)
+    d = x.shape[1]
+    segs = _segments(d, min(k, d))
+    cols = [
+        x[:, a:b].mean(axis=1) * np.sqrt(float(b - a)) for a, b in segs
+    ]
+    return np.stack(cols, axis=1).astype(np.float32)
+
+
+def paa_tlb_sampled(
+    x: np.ndarray, k: int, pairs: np.ndarray
+) -> tuple[float, float, float]:
+    t = paa_transform(x, k)
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    ti, tj = t[pairs[:, 0]], t[pairs[:, 1]]
+    dx = np.sqrt(np.maximum(((xi - xj) ** 2).sum(-1), 1e-30))
+    dt = np.sqrt(np.maximum(((ti - tj) ** 2).sum(-1), 0.0))
+    return gaussian_ci(np.where(dx > 1e-15, dt / dx, 1.0), 0.95)
+
+
+def paa_min_k(
+    x: np.ndarray,
+    target: float,
+    n_pairs: int = 800,
+    seed: int = 0,
+) -> int:
+    """Smallest segment count achieving the TLB target (binary search; PAA
+    quality is monotone-ish in k as in the paper's study)."""
+    rng = np.random.default_rng(seed)
+    pairs = sample_pairs(x.shape[0], n_pairs, rng)
+    d = x.shape[1]
+    lo, hi = 1, d
+    while lo < hi:
+        k = (lo + hi) // 2
+        mean, _, _ = paa_tlb_sampled(x, k, pairs)
+        if mean >= target:
+            hi = k
+        else:
+            lo = k + 1
+    return lo

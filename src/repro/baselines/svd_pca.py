@@ -1,0 +1,127 @@
+"""Non-sampled PCA baselines (paper §4.1 "Baselines"):
+
+* ``svd_binary_search`` — PCA via full SVD over ALL the data, then binary
+  search over k with the sampled-TLB evaluation (the paper's "SVD" baseline).
+* ``svd_halko_binary_search`` — same but the basis comes from SVD-Halko over
+  all the data (the paper's "SVD-Halko" baseline).
+* ``oracle`` — PCA over the offline-precomputed minimum sample proportion that
+  matches the full-SVD basis size (paper's "Oracle" baseline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import halko as halko_mod
+from repro.core import pca as pca_mod
+from repro.core.basis_search import _binary_search
+from repro.core.tlb import TLBEstimator
+from repro.core.types import DropConfig
+from repro.utils import Clock
+
+
+@dataclass
+class BaselineResult:
+    v: np.ndarray
+    mean: np.ndarray
+    k: int
+    tlb_mean: float
+    runtime_s: float
+
+    def transform(self, y: np.ndarray) -> np.ndarray:
+        return (np.asarray(y) - self.mean) @ self.v
+
+
+def _search_and_pack(
+    x: np.ndarray, mean, v, cfg: DropConfig, clock: Clock, rng
+) -> BaselineResult:
+    est = TLBEstimator(
+        x, jnp.asarray(v), rng, confidence=cfg.confidence, use_kernels=cfg.use_kernels
+    )
+    k, tlb_mean, _, _ = _binary_search(est, cfg.target_tlb, v.shape[1], cfg)
+    k = max(k, 1)
+    return BaselineResult(
+        v=np.asarray(v[:, :k]),
+        mean=np.asarray(mean),
+        k=k,
+        tlb_mean=tlb_mean,
+        runtime_s=clock.elapsed(),
+    )
+
+
+def svd_binary_search(x: np.ndarray, cfg: DropConfig | None = None) -> BaselineResult:
+    """Full-SVD PCA on all rows + binary search for min k (paper "SVD")."""
+    cfg = cfg or DropConfig()
+    clock = Clock()
+    rng = np.random.default_rng(cfg.seed + 1)
+    mean, v, _ = pca_mod.pca_fit_svd(jnp.asarray(x, dtype=jnp.float32))
+    v.block_until_ready()
+    return _search_and_pack(x, mean, v, cfg, clock, rng)
+
+
+def svd_halko_binary_search(
+    x: np.ndarray, cfg: DropConfig | None = None, rank: int | None = None
+) -> BaselineResult:
+    """SVD-Halko on all rows + binary search for min k (paper "SVD-Halko")."""
+    cfg = cfg or DropConfig()
+    clock = Clock()
+    rng = np.random.default_rng(cfg.seed + 1)
+    xs = jnp.asarray(x, dtype=jnp.float32)
+    mean, c = pca_mod.center(xs)
+    cap = rank or min(x.shape)
+    v, _ = halko_mod.svd_halko(
+        c,
+        cap,
+        jax.random.PRNGKey(cfg.seed),
+        oversample=cfg.halko_oversample,
+        power_iters=cfg.halko_power_iters,
+        use_kernels=cfg.use_kernels,
+    )
+    v.block_until_ready()
+    return _search_and_pack(x, mean, v, cfg, clock, rng)
+
+
+def oracle(
+    x: np.ndarray, proportion: float, cfg: DropConfig | None = None
+) -> BaselineResult:
+    """PCA over a precomputed minimal sample proportion (paper "Oracle")."""
+    cfg = cfg or DropConfig()
+    clock = Clock()
+    rng = np.random.default_rng(cfg.seed + 1)
+    m = x.shape[0]
+    n = max(2, int(round(proportion * m)))
+    idx = np.random.default_rng(cfg.seed).choice(m, size=n, replace=False)
+    xs = jnp.asarray(x[idx], dtype=jnp.float32)
+    mean, c = pca_mod.center(xs)
+    cap = min(n, x.shape[1])
+    v, _ = halko_mod.svd_halko(
+        c, cap, jax.random.PRNGKey(cfg.seed),
+        oversample=cfg.halko_oversample, power_iters=cfg.halko_power_iters,
+        use_kernels=cfg.use_kernels,
+    )
+    v.block_until_ready()
+    return _search_and_pack(x, mean, v, cfg, clock, rng)
+
+
+def pca_min_k(
+    x: np.ndarray, target: float, n_pairs: int = 800, seed: int = 0
+) -> int:
+    """Min PCA dimension for a TLB target via the all-prefix table (used by
+    the measurement-study benchmark, Table 6)."""
+    from repro.core.tlb import sample_pairs
+
+    rng = np.random.default_rng(seed)
+    pairs = sample_pairs(x.shape[0], n_pairs, rng)
+    _, v, _ = pca_mod.pca_fit_svd(jnp.asarray(x, dtype=jnp.float32))
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    vn = np.asarray(v, dtype=np.float64)
+    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
+    z = (xi - xj).astype(np.float64) @ vn
+    cum = np.cumsum(z * z, axis=1)
+    tlb_k = np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
+    ok = np.nonzero(tlb_k >= target)[0]
+    return int(ok[0]) + 1 if ok.size else x.shape[1]

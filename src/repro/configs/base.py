@@ -1,0 +1,188 @@
+"""Config system: model architecture + input-shape cells + registry.
+
+Every assigned architecture is a frozen ``ModelConfig`` in its own module
+(``repro/configs/<id>.py``) with the exact published hyperparameters, plus a
+``smoke()`` reduced config of the same family for CPU tests. Input shapes are
+the four assigned cells (train_4k / prefill_32k / decode_32k / long_500k).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention variants
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, ...] = ()  # qwen2-vl M-RoPE (t, h, w) half-dims
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    expand: int = 2
+    # hybrid block layout: indices of attention blocks among num_layers
+    attn_block_positions: tuple[int, ...] = ()
+    # §Perf B1 (validated 3.5x compute win; EXPERIMENTS.md): per-stream SSM
+    # projections (shard-aligned) instead of the fused in_proj. Set False to
+    # reproduce the pre-optimization baseline.
+    mamba_split_proj: bool = True
+    # §Perf A6: flash-attention KV tile length (VMEM working-set knob)
+    kv_chunk: int = 512
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    is_encoder_decoder: bool = False
+    encoder_ctx: int = 1500  # whisper n_audio_ctx
+    frontend: str | None = None  # "audio" | "vision" — STUB (embeddings given)
+    # numerics / training
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # citation (public literature source)
+    source: str = ""
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 128 so TP sharding always divides
+        (MaxText-style padding; extra logits are never targeted by labels)."""
+        return _pad_to(self.vocab_size, 128)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def uses_subquadratic_attention(self) -> bool:
+        """True when long-context (500k) decode is feasible: SSM state,
+        hybrid with O(1)-dominant state, or bounded sliding-window cache."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_padded
+        emb = v * d if self.tie_embeddings else 2 * v * d
+        per_attn = d * (self.num_heads * self.head_dim) * 2 + d * (
+            self.num_kv_heads * self.head_dim
+        ) * 2
+        per_mlp = 3 * d * self.d_ff  # SwiGLU
+        per_moe = self.num_experts * 3 * d * self.moe_d_ff + d * self.num_experts
+        di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+        per_mamba = (
+            d * (2 * di + 2 * n + h)  # in_proj -> x, z, B, C, dt
+            + di * d  # out_proj
+            + (di + 2 * n) * self.conv_width  # conv
+            + 3 * h  # A, D, dt_bias
+            + 2 * d  # norms
+        )
+        total = emb
+        if self.family == "ssm":
+            total += self.num_layers * (per_mamba + d)
+        elif self.family == "hybrid":
+            n_attn = len(self.attn_block_positions)
+            total += (self.num_layers - n_attn) * (per_mamba + d)
+            total += n_attn * (per_attn + per_mlp + 2 * d)
+        elif self.family == "moe":
+            total += self.num_layers * (per_attn + per_moe + 2 * d)
+        else:
+            layers = self.num_layers + self.encoder_layers
+            cross = self.num_layers * per_attn if self.is_encoder_decoder else 0
+            total += layers * (per_attn + per_mlp + 2 * d) + cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active parameters (MoE: only routed experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        dense = self.param_count() - self.num_layers * (
+            self.num_experts * 3 * self.d_model * self.moe_d_ff
+        )
+        return dense + self.num_layers * (
+            self.experts_per_token * 3 * self.d_model * self.moe_d_ff
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS: tuple[str, ...] = (
+    "qwen2_vl_2b",
+    "qwen3_32b",
+    "tinyllama_1_1b",
+    "granite_3_8b",
+    "deepseek_67b",
+    "mixtral_8x7b",
+    "granite_moe_3b_a800m",
+    "mamba2_2_7b",
+    "zamba2_1_2b",
+    "whisper_tiny",
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.smoke()
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) dry-run cell applies (DESIGN.md §6)."""
+    if shape.name == "long_500k" and not cfg.uses_subquadratic_attention:
+        return False, "full quadratic attention: 500k cache/step infeasible (skip per spec)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """(arch, shape, runnable, reason) for every assigned cell (10x4=40)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, shape)
+            out.append((arch, shape.name, ok, why))
+    return out

@@ -1,0 +1,36 @@
+"""DeepSeek-67B [arXiv:2401.02954; hf].
+
+Dense (llama-arch): 95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102400,
+    rope_theta=10000.0,
+    source="arXiv:2401.02954; hf:deepseek-ai/deepseek-llm-67b-base",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="deepseek-smoke",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=256,
+    )

@@ -1,0 +1,37 @@
+"""Granite-3.0-8B [hf:ibm-granite/granite-3.0 family; assignment spec].
+
+Dense: 40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    family="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12800,
+    vocab_size=49155,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-2b-base (family); assignment spec",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="granite-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=250,  # deliberately not a multiple of 128: tests vocab padding
+    )

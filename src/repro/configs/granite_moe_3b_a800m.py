@@ -1,0 +1,44 @@
+"""Granite-3.0-3B-A800M MoE [hf:ibm-granite/granite-3.0 family; assignment].
+
+MoE: 32L d_model=1536 24H (GQA kv=8) expert_d_ff=512 vocab=49155,
+40 experts top-8 (fine-grained experts).
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    num_experts=40,
+    experts_per_token=8,
+    moe_d_ff=512,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base (family); assignment spec",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="granite-moe-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        moe_d_ff=64,
+        num_experts=8,
+        experts_per_token=4,
+        vocab_size=256,
+    )

@@ -1,0 +1,43 @@
+"""Mamba2-2.7B [arXiv:2405.21060].
+
+SSM (SSD / state-space duality): 64L d_model=2560, attention-free,
+d_state=128, expand=2 (d_inner=5120), headdim=64 -> 80 SSD heads, vocab=50280.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_heads=80,  # d_inner / ssm_head_dim = 5120/64
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    conv_width=4,
+    expand=2,
+    tie_embeddings=True,
+    source="arXiv:2405.21060; state-spaces/mamba2-2.7b",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="mamba2-smoke",
+        num_layers=2,
+        d_model=64,
+        ssm_state=16,
+        ssm_heads=8,  # d_inner 128 / head_dim 16
+        ssm_head_dim=16,
+        ssm_chunk=16,
+        vocab_size=256,
+    )

@@ -1,0 +1,42 @@
+"""Qwen2-VL-2B backbone [arXiv:2409.12191; hf].
+
+VLM: 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936, M-RoPE.
+The vision frontend (dynamic-resolution ViT) is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),  # temporal/height/width half-dims (sum=64)
+    tie_embeddings=True,
+    frontend="vision",
+    source="arXiv:2409.12191; hf:Qwen/Qwen2-VL-2B",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="qwen2-vl-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        mrope_sections=(2, 3, 3),
+    )

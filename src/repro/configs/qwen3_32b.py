@@ -1,0 +1,37 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-32B family; spec per assignment].
+
+Dense: 64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936, qk_norm.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen3-8B (family); assignment spec",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="qwen3-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=256,
+    )

@@ -1,0 +1,32 @@
+"""Scaled-down variants of the assigned architectures (same family) for
+CPU-trainable end-to-end runs (examples/train_lm.py, launch/train.py)."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig, get_config
+
+
+def scaled_100m(arch: str) -> ModelConfig:
+    """The arch's family at ~100M params."""
+    cfg = get_config(arch)
+    if cfg.family in ("ssm", "hybrid"):
+        return replace(
+            cfg, name=f"{cfg.name}-100m", num_layers=6, d_model=512,
+            ssm_heads=16, ssm_head_dim=64, ssm_state=32, ssm_chunk=64,
+            vocab_size=8192,
+            attn_block_positions=(3,) if cfg.family == "hybrid" else (),
+            num_heads=8 if cfg.family == "hybrid" else 0,
+            num_kv_heads=8 if cfg.family == "hybrid" else 0,
+            head_dim=64 if cfg.family == "hybrid" else 0,
+            d_ff=1536 if cfg.family == "hybrid" else 0,
+        )
+    return replace(
+        cfg, name=f"{cfg.name}-100m", num_layers=8, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=8192,
+        moe_d_ff=512 if cfg.family == "moe" else 0,
+        num_experts=8 if cfg.family == "moe" else 0,
+        experts_per_token=2 if cfg.family == "moe" else 0,
+    )

@@ -1,0 +1,36 @@
+"""TinyLlama-1.1B [arXiv:2401.02385; hf].
+
+Dense (llama2-arch): 22L d_model=2048 32H (GQA kv=4) d_ff=5632 vocab=32000.
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=32000,
+    rope_theta=10000.0,
+    source="arXiv:2401.02385; hf:TinyLlama/TinyLlama-1.1B",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="tinyllama-smoke",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )

@@ -1,0 +1,45 @@
+"""Whisper-tiny [arXiv:2212.04356].
+
+Audio encoder-decoder backbone: 4L encoder + 4L decoder, d_model=384, 6H MHA,
+d_ff=1536, vocab=51865. The log-mel + conv frontend is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings
+(n_audio_ctx=1500 frames at d_model).
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,  # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    encoder_ctx=1500,
+    frontend="audio",
+    tie_embeddings=True,
+    source="arXiv:2212.04356; openai/whisper-tiny",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="whisper-smoke",
+        num_layers=2,
+        encoder_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        encoder_ctx=32,
+    )

@@ -1,0 +1,50 @@
+"""Zamba2-1.2B [arXiv:2411.15242; hf].
+
+Hybrid: 38 blocks, d_model=2048; Mamba2 backbone (d_state=64) with shared
+full-attention transformer blocks applied at two depths (32H MHA, d_ff=8192).
+"""
+
+from dataclasses import replace
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,  # shared attn blocks are MHA
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_heads=64,  # d_inner 4096 / head_dim 64
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    conv_width=4,
+    expand=2,
+    attn_block_positions=(9, 28),  # shared attention applied at 1/4 and 3/4 depth
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    source="arXiv:2411.15242; hf:Zyphra/Zamba2-1.2B",
+)
+
+
+def smoke() -> ModelConfig:
+    return replace(
+        CONFIG,
+        name="zamba2-smoke",
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        ssm_state=16,
+        ssm_heads=8,
+        ssm_head_dim=16,
+        ssm_chunk=16,
+        vocab_size=256,
+        attn_block_positions=(1, 3),
+    )

@@ -1,0 +1,10 @@
+"""DROP core: the paper primary contribution (progressive-sampling PCA
+optimizer with sampled TLB validation and cost-based termination)."""
+
+from repro.core.drop import drop  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    DEFAULT_SCHEDULE,
+    DropConfig,
+    DropResult,
+    IterationRecord,
+)

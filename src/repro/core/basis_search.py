@@ -1,0 +1,137 @@
+"""Basis fitting + search for the lowest TLB-preserving dimension (paper §3.4).
+
+COMPUTE-BASIS (Alg. 4): fit PCA on the sample (via SVD-Halko or full SVD),
+then find the smallest k achieving the TLB target. Two search modes:
+
+* ``binary`` — the paper's Algorithm 4: binary search over k in [0, k_{i-1}],
+  with EVALUATE-TLB's CI-driven pair doubling at each probe.
+* ``prefix`` — TPU-native (DESIGN.md §2): one fused pass computes the TLB CI at
+  every k simultaneously; the smallest satisfying k is an argmax over the
+  table. Strictly fewer device round-trips, MXU-shaped work.
+
+Both exploit the PCA prefix property (T_k = first k columns of T_{k'}) and TLB
+monotonicity in k.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import halko as halko_mod
+from repro.core import pca as pca_mod
+from repro.core.tlb import TLBEstimator
+from repro.core.types import DropConfig
+
+
+@dataclass
+class BasisSearchResult:
+    v_full: np.ndarray  # (d, cap) — full fitted basis (cached for prefix reuse)
+    mean: np.ndarray  # (d,) sample column means
+    k: int
+    tlb_mean: float
+    satisfied: bool
+    pairs_used: int
+    estimator: TLBEstimator  # retained for importance-sampling reuse
+
+
+def fit_basis(
+    sample: np.ndarray, cap: int, cfg: DropConfig, key: jax.Array
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fit a rank-``cap`` PCA basis on the sample. Returns (mean, V (d, cap))."""
+    xs = jnp.asarray(sample)
+    if cfg.svd == "full":
+        mean, v, _ = pca_mod.pca_fit_svd(xs, k=cap)
+    else:
+        mean, c = pca_mod.center(xs)
+        v, _ = halko_mod.svd_halko(
+            c,
+            cap,
+            key,
+            oversample=cfg.halko_oversample,
+            power_iters=cfg.halko_power_iters,
+            use_kernels=cfg.use_kernels,
+        )
+    return np.asarray(mean), np.asarray(v)
+
+
+def _binary_search(
+    est: TLBEstimator, target: float, cap: int, cfg: DropConfig
+) -> tuple[int, float, bool, int]:
+    """Alg. 4 COMPUTE-BASIS lines 2-9."""
+    low, high = 0, cap
+    pairs_used = 0
+    best_mean = 0.0
+    while low != high:
+        k = (low + high) // 2
+        e = est.estimate_at_k(
+            k, target, initial_pairs=cfg.initial_pairs, max_pairs=cfg.max_pairs
+        )
+        pairs_used = max(pairs_used, e.pairs_used)
+        if e.mean <= target:  # not good enough: need more components
+            low = k + 1
+        else:
+            high = k
+            best_mean = e.mean
+    k = low
+    final = est.estimate_at_k(
+        k, target, initial_pairs=cfg.initial_pairs, max_pairs=cfg.max_pairs
+    )
+    pairs_used = max(pairs_used, final.pairs_used)
+    return k, final.mean, final.mean >= target, pairs_used
+
+
+def _prefix_search(
+    est: TLBEstimator, target: float, cap: int, cfg: DropConfig
+) -> tuple[int, float, bool, int]:
+    """All-prefix search: smallest k whose mean TLB clears the target."""
+    mean_k, _, _, pairs = est.estimate_all_k(
+        target, initial_pairs=cfg.initial_pairs, max_pairs=cfg.max_pairs
+    )
+    ok = np.nonzero(mean_k[:cap] >= target)[0]
+    if ok.size:
+        k = int(ok[0]) + 1
+        return k, float(mean_k[k - 1]), True, pairs
+    return cap, float(mean_k[cap - 1]), False, pairs
+
+
+def compute_basis(
+    x: np.ndarray,
+    sample: np.ndarray,
+    prev_k: int | None,
+    cfg: DropConfig,
+    key: jax.Array,
+    rng: np.random.Generator,
+) -> BasisSearchResult:
+    """COMPUTE-BASIS(X, X_i, B): fit on the sample, evaluate TLB on full-data
+    pairs, search for the smallest satisfying k (bounded by k_{i-1})."""
+    m_i, d = sample.shape
+    hard_cap = min(d, m_i)
+    cap = hard_cap
+    if prev_k is not None:
+        # §3.4.3: prior satisfying basis of size d' < d bounds the Halko rank
+        cap = min(cap, prev_k)
+    cap = max(cap, 1)
+    # padded shape buckets (DESIGN.md §2): fit the basis at the next multiple
+    # of 32 so the jitted Halko/TLB kernels see a bounded set of shapes across
+    # iterations (data-dependent k would otherwise force fresh XLA compiles
+    # every iteration); the search below still uses the true cap
+    cap_pad = min(hard_cap, ((cap + 31) // 32) * 32)
+    mean, v = fit_basis(sample, max(cap_pad, cap), cfg, key)
+    est = TLBEstimator(
+        x, jnp.asarray(v), rng, confidence=cfg.confidence, use_kernels=cfg.use_kernels
+    )
+    search = _binary_search if cfg.search == "binary" else _prefix_search
+    k, tlb_mean, satisfied, pairs = search(est, cfg.target_tlb, cap, cfg)
+    return BasisSearchResult(
+        v_full=v,
+        mean=mean,
+        k=max(k, 1),
+        tlb_mean=tlb_mean,
+        satisfied=satisfied,
+        pairs_used=pairs,
+        estimator=est,
+    )

@@ -1,0 +1,64 @@
+"""Downstream cost functions C_m(k) (paper §3.1, §3.5).
+
+C_m maps output dimensionality k to *estimated downstream runtime in seconds*,
+so it is directly commensurable with DROP's own runtime R in the objective
+R + C_m(k). The paper's default models k-NN: O(m^2 k).
+
+Coefficients are calibrated once per environment with a micro-benchmark
+(``calibrate``), mirroring how the paper "tuned [the default] to k-NN".
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CostModel:
+    name: str
+    fn: Callable[[int], float]
+
+    def __call__(self, k: int) -> float:
+        return float(self.fn(max(int(k), 0)))
+
+
+# measured on this container via `calibrate_quadratic` (numpy BLAS pairwise
+# distances): seconds per (m^2 * k) element-op. Conservative default.
+DEFAULT_KNN_COEFF = 2.5e-10
+DEFAULT_LINEAR_COEFF = 1.0e-8
+
+
+def knn_cost(m: int, coeff: float = DEFAULT_KNN_COEFF) -> CostModel:
+    """k-NN / DBSCAN-style all-pairs downstream: C(k) = coeff * m^2 * k."""
+    return CostModel("knn", lambda k: coeff * float(m) * float(m) * k)
+
+
+def linear_cost(m: int, coeff: float = DEFAULT_LINEAR_COEFF) -> CostModel:
+    """Similarity-search-style downstream linear in dimension: C(k) = c*m*k."""
+    return CostModel("linear", lambda k: coeff * float(m) * k)
+
+
+def quadratic_dim_cost(coeff: float) -> CostModel:
+    """Covariance-estimation-style downstream: C(k) = coeff * k^2."""
+    return CostModel("quad_dim", lambda k: coeff * float(k) ** 2)
+
+
+def zero_cost() -> CostModel:
+    """Pure-quality mode: never pays for dimension, so DROP runs the whole
+    schedule and returns its best basis (oracle-quality reference)."""
+    return CostModel("zero", lambda k: 0.0)
+
+
+def calibrate_quadratic(m_probe: int = 512, d_probe: int = 32) -> float:
+    """Measure seconds per (m^2*k) element for all-pairs distance on this host."""
+    x = np.random.default_rng(0).normal(size=(m_probe, d_probe)).astype(np.float32)
+    t0 = time.perf_counter()
+    sq = (x * x).sum(1)
+    g = x @ x.T
+    _ = np.sqrt(np.maximum(sq[:, None] + sq[None, :] - 2 * g, 0.0))
+    dt = time.perf_counter() - t0
+    return dt / (m_probe * m_probe * d_probe)

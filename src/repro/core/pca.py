@@ -1,0 +1,59 @@
+"""PCA via truncated SVD (paper Algorithm 1) — the exact / baseline operator."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=())
+def center(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """FIT step: column means and centered matrix C_X (Alg. 1 lines 2-3)."""
+    xbar = jnp.mean(x, axis=0)
+    return xbar, x - xbar
+
+
+@jax.jit
+def center_masked(x: jax.Array, row_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Centering for zero-padded sample buckets.
+
+    Rows with ``row_mask == 0`` are padding; they are excluded from the mean and
+    re-zeroed after centering. Zero rows do not change the right singular
+    vectors (C'ᵀC' = CᵀC), so padded-bucket PCA is exact for the real rows.
+    """
+    w = row_mask.astype(x.dtype)[:, None]
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    xbar = jnp.sum(x * w, axis=0) / denom
+    return xbar, (x - xbar) * w
+
+
+def pca_fit_svd(x: jax.Array, k: int | None = None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """PCA via full (LAPACK) SVD. Returns (mean, V[:, :k], singular values).
+
+    V columns are the principal directions; ``(y - mean) @ V`` transforms.
+    """
+    xbar, c = center(x)
+    _, s, vt = jnp.linalg.svd(c, full_matrices=False)
+    v = vt.T
+    if k is not None:
+        v = v[:, :k]
+        s = s[:k]
+    return xbar, v, s
+
+
+def pca_transform(y: jax.Array, mean: jax.Array, v: jax.Array) -> jax.Array:
+    """TRANSFORM step (Alg. 1 lines 5-9)."""
+    return (y - mean) @ v
+
+
+def explained_spectrum(x: np.ndarray) -> np.ndarray:
+    """Normalized eigenvalue spectrum (paper Fig. 3): eigenvalues of the
+    covariance in decreasing order, normalized to sum to 1."""
+    x = np.asarray(x, dtype=np.float64)
+    c = x - x.mean(axis=0)
+    s = np.linalg.svd(c, compute_uv=False)
+    ev = s**2
+    return ev / max(ev.sum(), 1e-30)

@@ -1,0 +1,185 @@
+"""Sampled TLB estimation with CLT confidence intervals (paper §3.4.2, Alg. 4).
+
+TLB (Eq. 1) = mean over pairs of ||T(x_i) - T(x_j)|| / ||x_i - x_j||.
+
+Exact TLB costs O(m^2 d); DROP instead estimates it from sampled pairs with a
+Gaussian (CLT) confidence interval, doubling the pair count until the interval
+clears the target (online-aggregation style).
+
+TPU adaptation (DESIGN.md §2): because PCA bases are orthogonal and nested,
+``||T_k x - T_k y||^2 = sum_{j<=k} (v_j · (x-y))^2`` — so ONE matmul of pair
+differences against the full basis plus a prefix cumsum yields the TLB sample
+at EVERY k simultaneously. The classic per-k evaluation (paper's binary search)
+reads one column of this table; the TPU-native "prefix" search uses all of it.
+Centering cancels in pair differences, so TLB is mean-free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy import stats
+
+
+def sample_pairs(m: int, p: int, rng: np.random.Generator) -> np.ndarray:
+    """Draw p index pairs (i, j), i != j, uniformly (with replacement across
+    pairs — standard for CLT-based online aggregation)."""
+    i = rng.integers(0, m, size=p)
+    j = rng.integers(0, m - 1, size=p)
+    j = np.where(j >= i, j + 1, j)  # shift to skip the diagonal
+    return np.stack([i, j], axis=1).astype(np.int32)
+
+
+@jax.jit
+def prefix_tlb_table(xi: jax.Array, xj: jax.Array, v: jax.Array) -> jax.Array:
+    """(p, d), (p, d), (d, kmax) -> (p, kmax) per-pair TLB at every prefix k."""
+    diffs = xi - xj
+    denom2 = jnp.sum(diffs * diffs, axis=-1, keepdims=True)  # (p, 1)
+    z = jnp.matmul(diffs, v, precision=jax.lax.Precision.HIGHEST)  # (p, kmax)
+    cum = jnp.cumsum(z * z, axis=-1)
+    tlb = jnp.sqrt(jnp.clip(cum / jnp.maximum(denom2, 1e-30), 0.0, 1.0))
+    # coincident pairs have zero distance in every basis: TLB contribution 1
+    return jnp.where(denom2 > 1e-30, tlb, 1.0)
+
+
+def _kernel_prefix_tlb(xi, xj, v):
+    from repro.kernels.pairwise_tlb import ops as tlb_ops
+
+    return tlb_ops.pairwise_tlb(xi, xj, v)
+
+
+def gaussian_ci(vals: np.ndarray, confidence: float) -> tuple[float, float, float]:
+    """CLT mean ± z * s/sqrt(n). Returns (mean, lo, hi)."""
+    n = vals.shape[0]
+    mean = float(vals.mean())
+    z = float(stats.norm.ppf(0.5 + confidence / 2.0))
+    half = z * float(vals.std(ddof=1)) / np.sqrt(n) if n > 1 else 1.0
+    return mean, mean - half, mean + half
+
+
+@dataclass
+class TLBEstimate:
+    mean: float
+    lo: float
+    hi: float
+    pairs_used: int
+
+
+class TLBEstimator:
+    """Incrementally samples pairs from the FULL dataset and maintains the
+    per-pair all-prefix TLB table for one candidate basis V.
+
+    Pair draws double lazily; previously computed rows are reused (this is what
+    lets DROP promote worst-fit pairs into the next iteration's sample)."""
+
+    def __init__(
+        self,
+        x: np.ndarray,
+        v: jax.Array,
+        rng: np.random.Generator,
+        confidence: float = 0.95,
+        use_kernels: bool = False,
+    ) -> None:
+        self.x = x
+        self.v = v
+        self.rng = rng
+        self.confidence = confidence
+        self.m = x.shape[0]
+        self.num_pairs_total = self.m * (self.m - 1) // 2
+        self._fn = _kernel_prefix_tlb if use_kernels else prefix_tlb_table
+        self._pairs = np.zeros((0, 2), dtype=np.int32)
+        self._table = np.zeros((0, int(v.shape[1])), dtype=np.float32)
+
+    def _extend(self, p: int) -> None:
+        if p <= self._pairs.shape[0]:
+            return
+        new = sample_pairs(self.m, p - self._pairs.shape[0], self.rng)
+        xi = jnp.asarray(self.x[new[:, 0]])
+        xj = jnp.asarray(self.x[new[:, 1]])
+        rows = np.asarray(self._fn(xi, xj, self.v))
+        self._pairs = np.concatenate([self._pairs, new], axis=0)
+        self._table = np.concatenate([self._table, rows], axis=0)
+
+    def table(self, p: int) -> np.ndarray:
+        """(p, kmax) TLB table over the first p sampled pairs."""
+        self._extend(p)
+        return self._table[:p]
+
+    def estimate_at_k(
+        self, k: int, target: float, initial_pairs: int = 100, max_pairs: int = 6400
+    ) -> TLBEstimate:
+        """EVALUATE-TLB (Alg. 4 lines 11-18): double pairs until the CI clears
+        the target (or the budget is exhausted). Uses only column k."""
+        p = min(initial_pairs, max_pairs, self.num_pairs_total)
+        while True:
+            if k <= 0:
+                return TLBEstimate(0.0, 0.0, 0.0, 0)
+            vals = self.table(p)[:, k - 1]
+            mean, lo, hi = gaussian_ci(vals, self.confidence)
+            if lo > target or hi < target or p >= min(max_pairs, self.num_pairs_total):
+                return TLBEstimate(mean, lo, hi, p)
+            p = min(p * 2, max_pairs, self.num_pairs_total)
+
+    def estimate_all_k(
+        self, target: float, initial_pairs: int = 100, max_pairs: int = 6400
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """All-prefix estimation (TPU-native path): double pairs until the
+        smallest-satisfying-k decision is CI-stable. Returns (mean_k, lo_k,
+        hi_k, pairs_used), each of shape (kmax,)."""
+        p = min(initial_pairs, max_pairs, self.num_pairs_total)
+        z = float(stats.norm.ppf(0.5 + self.confidence / 2.0))
+        while True:
+            tab = self.table(p)
+            mean = tab.mean(axis=0)
+            half = z * tab.std(axis=0, ddof=1) / np.sqrt(p)
+            lo, hi = mean - half, mean + half
+            # decision stable when some k's lower bound clears the target, or
+            # even the full basis' upper bound cannot reach it
+            if (lo >= target).any() or hi[-1] < target or p >= min(
+                max_pairs, self.num_pairs_total
+            ):
+                return mean, lo, hi, p
+            p = min(p * 2, max_pairs, self.num_pairs_total)
+
+    def point_scores(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """Per-point worst-fit scores from all evaluated pairs at dimension k:
+        score(point) = min TLB over pairs touching it (lower = worse fit).
+        Used for importance sampling / work reuse (§3.3.2)."""
+        if self._pairs.shape[0] == 0 or k <= 0:
+            return np.zeros(0, dtype=np.int32), np.zeros(0, dtype=np.float32)
+        vals = self._table[:, k - 1]
+        pts = self._pairs.ravel()
+        scores = np.repeat(vals, 2)
+        order = np.argsort(scores)  # ascending: worst first
+        pts, scores = pts[order], scores[order]
+        uniq, first = np.unique(pts, return_index=True)
+        return uniq.astype(np.int32), scores[first].astype(np.float32)
+
+
+def exact_tlb(x: np.ndarray, transform: np.ndarray, block: int = 512) -> float:
+    """Exact O(m^2 d) TLB (Eq. 1) — test oracle only. ``transform`` is (d, k)."""
+    x = np.asarray(x, dtype=np.float64)
+    t = x @ np.asarray(transform, dtype=np.float64)
+    m = x.shape[0]
+    total, count = 0.0, 0
+    for a in range(0, m, block):
+        xa, ta = x[a : a + block], t[a : a + block]
+        for b in range(a, m, block):
+            xb, tb = x[b : b + block], t[b : b + block]
+            dx = np.sqrt(np.maximum(
+                ((xa[:, None, :] - xb[None, :, :]) ** 2).sum(-1), 1e-30))
+            dt = np.sqrt(np.maximum(
+                ((ta[:, None, :] - tb[None, :, :]) ** 2).sum(-1), 0.0))
+            ratio = dt / dx
+            if a == b:
+                iu = np.triu_indices(xa.shape[0], k=1)
+                total += ratio[iu].sum()
+                count += iu[0].size
+            else:
+                total += ratio.sum()
+                count += ratio.size
+    return total / max(count, 1)

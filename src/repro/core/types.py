@@ -1,0 +1,93 @@
+"""Core dataclasses for the DROP optimizer (paper Table 1 notation)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Literal, Sequence
+
+import numpy as np
+
+# Default progressive sampling schedule from §4.1 of the paper: ten steps,
+# data processed no more than ~2.4x in total.
+DEFAULT_SCHEDULE: tuple[float, ...] = (
+    0.01, 0.02, 0.03, 0.04, 0.05, 0.10, 0.20, 0.30, 0.65, 1.00,
+)
+
+
+@dataclass(frozen=True)
+class DropConfig:
+    """Inputs of Problem 3.1 plus implementation knobs.
+
+    Attributes:
+        target_tlb: B — TLB preservation level (paper default 0.98).
+        confidence: c — confidence for the sampled TLB estimate (default 0.95).
+        schedule: progressive sampling schedule (fractions of m).
+        reuse_fraction: q/100 — bottom-percentile of points carried into the
+            next sample (importance sampling / work reuse; paper default 0.10).
+        svd: "halko" (paper's randomized PCA) or "full" (exact SVD).
+        halko_oversample: p in Algorithm 3 (default 5).
+        halko_power_iters: q in Algorithm 3 (default 1).
+        search: "binary" (paper Algorithm 4) or "prefix" (TPU-native all-prefix
+            TLB search — one fused pass instead of O(log d) evaluations).
+        initial_pairs: starting pair count for the TLB CI loop (paper: 100).
+        max_pairs: cap on TLB evaluation pairs (paper observes <=300 typical).
+        use_kernels: route hot matmuls through the Pallas kernel wrappers.
+        min_iterations: run at least this many iterations before the progress
+            estimator may terminate (needs 2 points for a slope).
+        seed: determinism.
+    """
+
+    target_tlb: float = 0.98
+    confidence: float = 0.95
+    schedule: Sequence[float] = DEFAULT_SCHEDULE
+    reuse_fraction: float = 0.10
+    svd: Literal["halko", "full"] = "halko"
+    halko_oversample: int = 5
+    halko_power_iters: int = 1
+    search: Literal["binary", "prefix"] = "binary"
+    initial_pairs: int = 100
+    # the paper observes <=300 pairs suffice; the cap only binds when the CI
+    # straddles the target at the boundary k (where more pairs cannot change
+    # the decision materially but cost O(pairs x d x k) each)
+    max_pairs: int = 800
+    use_kernels: bool = False
+    min_iterations: int = 2
+    seed: int = 0
+
+
+@dataclass
+class IterationRecord:
+    """Per-iteration telemetry (i, m_i, k_i, r_i, obj_i)."""
+
+    i: int
+    sample_size: int
+    k: int
+    tlb_estimate: float
+    runtime_s: float
+    objective: float
+    satisfied: bool
+    pairs_used: int
+
+
+@dataclass
+class DropResult:
+    """DROP output: T_k (here V: d x k, plus the train-mean for centering)."""
+
+    v: np.ndarray  # (d, k) PCA projection matrix (columns = components)
+    mean: np.ndarray  # (d,) training column means
+    k: int
+    tlb_estimate: float
+    satisfied: bool
+    runtime_s: float
+    iterations: list[IterationRecord] = field(default_factory=list)
+
+    def transform(self, y: np.ndarray) -> np.ndarray:
+        """Apply the learned transformation (Algorithm 1 TRANSFORM)."""
+        return (np.asarray(y) - self.mean) @ self.v
+
+    @property
+    def total_rows_processed(self) -> int:
+        return sum(rec.sample_size for rec in self.iterations)
+
+
+CostFn = Callable[[int], float]

@@ -1,0 +1,10 @@
+"""Data substrate: synthetic UCR-like time series suite, windowing, LM token pipeline."""
+
+from repro.data.timeseries import (  # noqa: F401
+    ecg_like,
+    random_walk,
+    sinusoid_mixture,
+    ucr_like_suite,
+    white_noise,
+    znormalize,
+)

@@ -1,0 +1,66 @@
+"""LM token pipeline: deterministic synthetic corpus, host-sharded batching.
+
+Data here is a synthetic Zipf-distributed token stream with Markov structure
+(so loss curves actually descend), generated deterministically from
+(seed, step, host) — the same property a fleet-scale pipeline gets from
+tfds/grain index files: any host can reconstruct its shard of any step
+without coordination, which is what makes data loading restartable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+class TokenPipeline:
+    """Stateless per-step batch synthesis: batch(step) is a pure function."""
+
+    def __init__(self, cfg: TokenPipelineConfig):
+        assert cfg.global_batch % cfg.n_hosts == 0
+        self.cfg = cfg
+        self.local_batch = cfg.global_batch // cfg.n_hosts
+        rng = np.random.default_rng(cfg.seed)
+        # fixed Markov transition structure over a small state space projected
+        # onto the vocab: gives learnable bigram statistics
+        self.n_states = 64
+        self.trans = rng.dirichlet(np.ones(self.n_states) * 0.2, self.n_states)
+        zipf = 1.0 / np.arange(1, cfg.vocab_size + 1) ** 1.1
+        self.state_vocab = [
+            rng.choice(cfg.vocab_size, p=zipf / zipf.sum(), size=256)
+            for _ in range(self.n_states)
+        ]
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_id])
+        )
+        b, s = self.local_batch, cfg.seq_len
+        states = rng.integers(0, self.n_states, size=b)
+        toks = np.empty((b, s + 1), np.int32)
+        for t in range(s + 1):
+            # vectorized markov walk
+            u = rng.random(b)
+            cdfs = np.cumsum(self.trans[states], axis=1)
+            states = (u[:, None] < cdfs).argmax(axis=1)
+            pick = rng.integers(0, 256, size=b)
+            toks[:, t] = np.array(
+                [self.state_vocab[st][p] for st, p in zip(states, pick)]
+            )
+        return {
+            "inputs": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "mask": np.ones((b, s), np.float32),
+        }

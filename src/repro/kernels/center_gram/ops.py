@@ -1,0 +1,18 @@
+"""Dispatch wrapper for the fused center+gram kernel."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.center_gram.center_gram import center_gram_pallas
+from repro.kernels.center_gram.ref import center_gram_ref
+
+
+def center_gram(x: jax.Array, **kw) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return center_gram_pallas(x, **kw)
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return center_gram_pallas(x, interpret=True, **kw)
+    return center_gram_ref(x)

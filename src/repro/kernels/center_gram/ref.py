@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused center+gram kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def center_gram_ref(x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    c = xf - jnp.mean(xf, axis=0)
+    return jnp.matmul(c.T, c, precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,19 @@
+"""Dispatch wrapper for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def flash_decode(q, k_cache, v_cache, valid, **kw):
+    if jax.default_backend() == "tpu":
+        return flash_decode_pallas(q, k_cache, v_cache, valid, **kw)
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return flash_decode_pallas(q, k_cache, v_cache, valid,
+                                   interpret=True, **kw)
+    return flash_decode_ref(q, k_cache, v_cache, valid)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q, k_cache, v_cache, valid):
+    """q: (B, KV, G, hd); caches: (B, T, KV, hd); valid: (B, T)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Jitted dispatch wrapper for the tiled matmul kernel.
+
+On TPU backends the Pallas kernel runs natively; elsewhere (this CPU
+container) we fall back to the jnp oracle unless ``REPRO_PALLAS_INTERPRET=1``
+forces interpreter-mode execution (used by the kernel test-suite sweeps).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def _use_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def matmul(a: jax.Array, b: jax.Array, **block_kwargs) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return matmul_pallas(a, b, **block_kwargs)
+    if _use_interpret():
+        return matmul_pallas(a, b, interpret=True, **block_kwargs)
+    return matmul_ref(a, b)

@@ -1,0 +1,18 @@
+"""Dispatch wrapper for the pairwise-TLB kernel (TPU native / interpret / ref)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.pairwise_tlb.pairwise_tlb import pairwise_tlb_pallas
+from repro.kernels.pairwise_tlb.ref import pairwise_tlb_ref
+
+
+def pairwise_tlb(xi: jax.Array, xj: jax.Array, v: jax.Array, **kw) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return pairwise_tlb_pallas(xi, xj, v, **kw)
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return pairwise_tlb_pallas(xi, xj, v, interpret=True, **kw)
+    return pairwise_tlb_ref(xi, xj, v)

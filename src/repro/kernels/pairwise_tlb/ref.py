@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the all-prefix pairwise-TLB kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_tlb_ref(xi: jax.Array, xj: jax.Array, v: jax.Array) -> jax.Array:
+    diffs = (xi - xj).astype(jnp.float32)
+    denom2 = jnp.sum(diffs * diffs, axis=-1, keepdims=True)
+    z = jnp.matmul(diffs, v.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST)
+    cum = jnp.cumsum(z * z, axis=-1)
+    tlb = jnp.sqrt(jnp.clip(cum / jnp.maximum(denom2, 1e-30), 0.0, 1.0))
+    return jnp.where(denom2 > 1e-30, tlb, 1.0)

@@ -1,0 +1,218 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver: lower one (arch x shape) cell with a named set
+of optimization knobs and print the three roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch deepseek_67b \
+        --shape train_4k --variant A1_constraints
+
+Variants are hypothesis-driven changes logged in EXPERIMENTS.md §Perf.
+"""
+
+import argparse
+import json
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.dryrun import (
+    batch_specs,
+    batch_struct,
+    input_specs,
+    opt_struct,
+    params_struct,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import build_roofline, suggestion
+from repro.sharding.specs import ShardCtx, param_specs
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "hillclimb")
+
+
+def _grad_compress_specs(cfg, shape, ctx, rank, remat):
+    """DROP-compressed cross-pod gradient reduction (§Perf A7/A8).
+
+    Rank-r bases for the big weight families (discovered by DROP on gradient
+    matrices at runtime; here rank is the knob). The pod all-reduce of those
+    grads shrinks to r/cols of the dense reduce; error-feedback residuals are
+    carried per pod."""
+    import numpy as np
+
+    # the pod-manual shard_map trips an XLA SPMD assert on gathers: feed
+    # stub embeddings (same bytes/FLOPs as post-lookup reality) and use the
+    # one-hot label selection (ShardCtx.onehot_loss)
+    ctx.onehot_loss = True
+    p_struct = params_struct(cfg)
+    o_struct = opt_struct(p_struct)
+    b_struct = batch_struct(cfg, shape)
+    b_struct["inputs"] = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len, cfg.d_model), jnp.bfloat16
+    )
+    n_pods = ctx.mesh.devices.shape[0]
+
+    # concrete bases (orthonormal columns) for the compressible matrices;
+    # rank==0 means "same code path, dense (uncompressed) pod reduce"
+    bases = {}
+    rng = np.random.default_rng(0)
+    if rank > 0:
+        for path, leaf in jax.tree_util.tree_leaves_with_path(p_struct):
+            names = tuple(
+                p.key if hasattr(p, "key") else str(p) for p in path
+            )
+            if not any(n in names for n in
+                       ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")):
+                continue
+            cols = leaf.shape[-1]
+            if cols < 4 * rank:
+                continue
+            q, _ = np.linalg.qr(rng.normal(size=(cols, rank)).astype(np.float32))
+            from repro.train.grad_compress import _path_key
+
+            bases[_path_key(path)] = jnp.asarray(q)
+
+    step = make_train_step(
+        cfg, OptimizerConfig(), ctx, remat=remat, compress_bases=bases
+    )
+    resid_struct = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_pods, *s.shape), jnp.float32),
+        p_struct,
+    )
+    resid_specs = jax.tree_util.tree_map(
+        lambda s: P("pod"), p_struct
+    )
+    b_specs = batch_specs(cfg, shape, ctx)
+    b_specs["inputs"] = P(ctx.dp, None, None)  # stub embeddings are 3D
+    specs = (
+        param_specs(p_struct),
+        param_specs(o_struct),
+        b_specs,
+        resid_specs,
+    )
+    args = (p_struct, o_struct, b_struct, resid_struct)
+    return args, specs, step, (0, 1, 3)
+
+
+def run_variant(
+    arch: str,
+    shape_name: str,
+    variant: str,
+    *,
+    tuned: bool = False,
+    microbatches: int = 1,
+    remat: str = "full",
+    mamba_split: bool = False,
+    kv_rank: int | None = None,
+    multi_pod: bool = False,
+    kv_chunk: int | None = None,
+    grad_compress_rank: int | None = None,
+    serve_params: bool = False,
+) -> dict:
+    cfg = get_config(arch)
+    if mamba_split:
+        cfg = replace(cfg, mamba_split_proj=True)
+    if kv_chunk is not None:
+        cfg = replace(cfg, kv_chunk=kv_chunk)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = ShardCtx(mesh=mesh, tuned=tuned)
+
+    t0 = time.time()
+    if shape.kind == "train" and grad_compress_rank is not None:
+        assert multi_pod, "grad compression targets the pod axis"
+        args, specs, step, donate = _grad_compress_specs(
+            cfg, shape, ctx, grad_compress_rank, remat
+        )
+    elif shape.kind == "train":
+        p_struct = params_struct(cfg)
+        o_struct = opt_struct(p_struct)
+        b_struct = batch_struct(cfg, shape)
+        specs = (
+            param_specs(p_struct),
+            param_specs(o_struct),
+            batch_specs(cfg, shape, ctx),
+        )
+        step = make_train_step(
+            cfg, OptimizerConfig(), ctx, remat=remat, microbatches=microbatches
+        )
+        args, donate = (p_struct, o_struct, b_struct), (0, 1)
+    elif shape.kind == "decode" and kv_rank is not None:
+        from repro.launch.kvcomp import compressed_decode_specs
+
+        args, specs, step, donate = compressed_decode_specs(
+            cfg, shape, ctx, kv_rank, serve_params=serve_params
+        )
+    else:
+        args, specs, step, donate = input_specs(cfg, shape, ctx)
+        if serve_params and shape.kind == "decode":
+            specs = (param_specs(args[0], serve=True),) + tuple(specs[1:])
+
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    with mesh:
+        compiled = jax.jit(
+            step, in_shardings=shardings, donate_argnums=donate
+        ).lower(*args).compile()
+    roof = build_roofline(cfg, shape, "multi" if multi_pod else "single",
+                          mesh.devices.size, compiled, note=variant)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "compile_s": round(time.time() - t0, 1),
+        "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s, "dominant": roof.dominant,
+        "useful_ratio": roof.useful_ratio,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "arg_gb": mem.argument_size_in_bytes / 1e9,
+        "collective_ops": {k: v / 1e9 for k, v in roof.collective_ops.items()},
+        "suggestion": suggestion(roof),
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{arch}__{shape_name}__{variant}.json"),
+              "w") as f:
+        json.dump(rec, f, indent=2)
+    print(
+        f"[{variant}] compute={roof.compute_s:.4f}s memory={roof.memory_s:.4f}s "
+        f"collective={roof.collective_s:.4f}s dom={roof.dominant} "
+        f"useful={roof.useful_ratio:.3f} temp={rec['temp_gb']:.1f}GB "
+        f"(compile {rec['compile_s']}s)"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--tuned", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--mamba-split", action="store_true")
+    ap.add_argument("--kv-rank", type=int, default=None)
+    ap.add_argument("--kv-chunk", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-compress-rank", type=int, default=None)
+    ap.add_argument("--serve-params", action="store_true")
+    args = ap.parse_args()
+    run_variant(
+        args.arch, args.shape, args.variant,
+        tuned=args.tuned, microbatches=args.microbatches, remat=args.remat,
+        mamba_split=args.mamba_split, kv_rank=args.kv_rank,
+        multi_pod=args.multi_pod, kv_chunk=args.kv_chunk,
+        grad_compress_rank=args.grad_compress_rank,
+        serve_params=args.serve_params,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction (prescribed shapes).
+
+single-pod:  (16, 16)    -> ("data", "model")        = 256 chips
+multi-pod:   (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state; only launch/dryrun.py forces the 512-device host platform.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:  # e.g. 512 forced host devices, single-pod mesh
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} — run under "
+        "launch/dryrun.py (which forces XLA_FLAGS device count) for dry-runs"
+    )
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many host devices tests force (>=4)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,81 @@
+"""Training launcher CLI: reduced configs train for real on this host; full
+configs lower/compile against the production meshes (use dryrun.py for the
+no-allocation path).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --steps 100 --scale smoke [--drop-compress] [--failure-prob 0.02]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.train.grad_compress import GradCompressConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+class _CliTrainer(Trainer):
+    seq_len = 256
+    batch = 8
+
+    def _seq_len(self) -> int:
+        return self.seq_len
+
+    def _batch(self) -> int:
+        return self.batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama_1_1b")
+    ap.add_argument("--scale", choices=["smoke", "100m"], default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--failure-prob", type=float, default=0.0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--drop-compress", action="store_true")
+    args = ap.parse_args()
+
+    if args.scale == "smoke":
+        cfg = get_smoke_config(args.arch)
+    else:
+        from repro.configs.scaled import scaled_100m
+
+        cfg = scaled_100m(args.arch)
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) "
+          f"for {args.steps} steps")
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches,
+        remat=args.remat,
+        failure_prob=args.failure_prob,
+        grad_compress=GradCompressConfig() if args.drop_compress else None,
+    )
+    trainer = _CliTrainer(
+        cfg,
+        OptimizerConfig(learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps),
+        tcfg,
+    )
+    trainer.seq_len = args.seq_len
+    trainer.batch = args.batch
+    report = trainer.run()
+    print(f"done: steps={report.steps_run} restarts={report.restarts} "
+          f"loss {np.mean(report.losses[:5]):.4f} -> "
+          f"{np.mean(report.losses[-5:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

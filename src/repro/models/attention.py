@@ -1,0 +1,211 @@
+"""GQA attention with double-chunked online softmax (flash-style in JAX).
+
+Design (DESIGN.md §5): for train/prefill the query SEQUENCE is sharded over
+the "model" mesh axis (sp_q) — uniform across all assigned archs regardless of
+head-count divisibility — while K/V (small for GQA) are gathered. The math
+here is layout-agnostic; sharding is imposed by constraints in blocks.py.
+
+Memory: scores are never materialized beyond one (q_chunk x kv_chunk) tile per
+(batch, head): an outer scan over query chunks and an inner scan over KV
+chunks carry online-softmax stats (m, l, acc), exactly the FlashAttention
+recurrence. This is what keeps the 32k-prefill cells inside HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (d, H*hd)
+    wk: jax.Array  # (d, KV*hd)
+    wv: jax.Array  # (d, KV*hd)
+    wo: jax.Array  # (H*hd, d)
+    q_norm: jax.Array | None  # (hd,) qk_norm scales (qwen3)
+    k_norm: jax.Array | None
+
+
+def init_attention(key, d, num_heads, num_kv_heads, head_dim, dtype, qk_norm=False):
+    from repro.models.layers import init_dense
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, d, num_heads * head_dim, dtype),
+        "wk": init_dense(k2, d, num_kv_heads * head_dim, dtype),
+        "wv": init_dense(k3, d, num_kv_heads * head_dim, dtype),
+        "wo": init_dense(k4, num_heads * head_dim, d, dtype),
+        **(
+            {
+                "q_norm": jnp.ones((head_dim,), dtype=dtype),
+                "k_norm": jnp.ones((head_dim,), dtype=dtype),
+            }
+            if qk_norm
+            else {}
+        ),
+    }
+
+
+def _mask(pos_q, pos_k, causal: bool, window: int | None):
+    """(Cq, Ck) allowed-attention mask from absolute positions."""
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), dtype=bool)
+    if causal:
+        m &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        m &= pos_q[:, None] - pos_k[None, :] < window
+    return m
+
+
+def _attn_tile(q, kc, vc, mask, scale):
+    """One online-softmax tile. q: (B, Cq, KV, G, hd); kc/vc: (B, Ck, KV, hd).
+    Returns (s_max, p, pv) pieces for the recurrence."""
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", q, kc, preferred_element_type=jnp.float32
+    ) * scale  # (B, KV, G, Cq, Ck)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s
+
+
+def attention(
+    x_q: jax.Array,  # (B, Sq, d) — possibly a seq shard
+    x_kv: jax.Array,  # (B, Skv, d) — full sequence
+    params: dict,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    pos_q: jax.Array,  # (Sq,) absolute positions of the q rows
+    pos_k: jax.Array,  # (Skv,)
+    causal: bool = True,
+    window: int | None = None,
+    rope_theta: float = 10000.0,
+    mrope_sections: tuple[int, ...] = (),
+    qk_norm_eps: float = 1e-6,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    kv_constrain=None,  # sharding hook: gathers K/V across the "model" axis
+    return_kv: bool = False,
+) -> jax.Array:
+    """Full attention sublayer: qkv proj -> rope -> flash -> out proj."""
+    from repro.models.layers import apply_mrope, apply_rope, rms_norm
+
+    b, sq, d = x_q.shape
+    skv = x_kv.shape[1]
+    h, kv, hd = num_heads, num_kv_heads, head_dim
+    g = h // kv
+
+    q = (x_q @ params["wq"]).reshape(b, sq, h, hd)
+    k = (x_kv @ params["wk"]).reshape(b, skv, kv, hd)
+    v = (x_kv @ params["wv"]).reshape(b, skv, kv, hd)
+
+    if "q_norm" in params:  # qwen3 qk_norm: per-head RMS norm before rope
+        q = rms_norm(q, params["q_norm"], qk_norm_eps)
+        k = rms_norm(k, params["k_norm"], qk_norm_eps)
+
+    if mrope_sections:
+        pq3 = jnp.broadcast_to(pos_q, (3,) + pos_q.shape)
+        pk3 = jnp.broadcast_to(pos_k, (3,) + pos_k.shape)
+        q = apply_mrope(q, pq3, mrope_sections, rope_theta)
+        k = apply_mrope(k, pk3, mrope_sections, rope_theta)
+    elif rope_theta > 0:
+        q = apply_rope(q, pos_q, rope_theta)
+        k = apply_rope(k, pos_k, rope_theta)
+
+    if kv_constrain is not None:  # sp_q: K/V computed seq-sharded, gathered here
+        k = kv_constrain(k)
+        v = kv_constrain(v)
+
+    out = flash_attention(
+        q.reshape(b, sq, kv, g, hd),
+        k,
+        v,
+        pos_q=pos_q,
+        pos_k=pos_k,
+        causal=causal,
+        window=window,
+        q_chunk=q_chunk,
+        kv_chunk=kv_chunk,
+    )  # (B, Sq, KV, G, hd)
+    y = out.reshape(b, sq, h * hd) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, KV, G, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,  # (B, Skv, KV, hd)
+    *,
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    causal: bool,
+    window: int | None,
+    q_chunk: int = 0,  # unused; queries stay parallel (sharded over "model")
+    kv_chunk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks only.
+
+    Queries are NOT scanned: under sp_q sharding the q rows are split over the
+    "model" mesh axis, so keeping them as one parallel dimension is what makes
+    every device busy. Per-device transient is (B_local, H, Sq_local, Ck).
+    Returns (B, Sq, KV, G, hd)."""
+    b, sq, kv, g, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    ck = min(kv_chunk, skv)
+    nk = skv // ck
+    assert skv % ck == 0, (skv, ck)
+
+    ks = k.reshape(b, nk, ck, kv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, ck, kv, hd).transpose(1, 0, 2, 3, 4)
+    pks = pos_k.reshape(nk, ck)
+
+    def kv_step(carry, kv_in):
+        m, l, acc = carry
+        kc, vc, pk = kv_in
+        s = _attn_tile(q, kc, vc, _mask(pos_q, pk, causal, window), scale)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        # (§Perf A6 tried re-quantizing p to bf16 for the PV contraction;
+        # refuted — no transient win under CPU lowering, and it costs decode
+        # parity accuracy. Keep f32 p; MXU handles the cast for free on TPU.)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vc, preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, pks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, KV, G, hd) — the new token's query
+    k_cache: jax.Array,  # (B, T, KV, hd)
+    v_cache: jax.Array,  # (B, T, KV, hd)
+    *,
+    length_mask: jax.Array,  # (B, T) bool — valid cache slots
+) -> jax.Array:
+    """Single-step cache attention (unsharded reference; the distributed
+    seq-sharded version lives in repro.serve.decode.flash_decode)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum(
+        "bqkgh,btkh->bkgqt", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(length_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Shared neural-net layers: norms, RoPE (incl. M-RoPE), embeddings.
+
+Functional style: params are plain nested dicts of jax.Arrays; every layer is
+an ``init_*`` returning params plus a pure ``apply`` function. Layer stacks
+are created pre-stacked (leading layer dim) for scan-over-layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dtype) * scale
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dtype) * scale + bias
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    """Inverse frequencies for rotary embedding (half of head_dim)."""
+    return 1.0 / (
+        theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Standard RoPE. x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: tuple[int, ...],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: head_dim/2 frequencies split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream. ``positions``: (3, ..., S) — with the stubbed vision frontend all
+    three streams carry the text position (the lowering-faithful degenerate
+    case); real image patches would carry (t, h, w) grid coordinates.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)  # (hd/2,)
+    # select the position stream per frequency slot by section
+    sec_id = np.repeat(np.arange(len(sections)), sections)  # (hd/2,)
+    pos = positions.astype(jnp.float32)  # (3, ..., S)
+    pos_per_slot = jnp.take(pos, jnp.asarray(sec_id), axis=0)  # (hd/2, ..., S)
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)  # (..., S, hd/2)
+    ang = pos_per_slot * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal position embeddings (length, d)."""
+    log_timescale = np.log(10000.0) / (d // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d // 2))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1).astype(np.float32)

@@ -1,0 +1,34 @@
+"""Feed-forward sublayers: SwiGLU (llama-family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, d_ff, dtype),
+        "w_up": init_dense(k2, d, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(x: jax.Array, params: dict) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": init_dense(k1, d, d_ff, dtype),
+        "w_down": init_dense(k2, d_ff, d, dtype),
+    }
+
+
+def gelu_mlp(x: jax.Array, params: dict) -> jax.Array:
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]

@@ -1,0 +1,29 @@
+"""Model registry: family dispatch for init / loss / forward."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer, whisper
+from repro.sharding.specs import ShardCtx
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> dict:
+    if cfg.is_encoder_decoder:
+        return whisper.init_whisper(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx, remat: str = "full"):
+    if cfg.is_encoder_decoder:
+        return whisper.whisper_loss(params, batch, cfg, ctx, remat=remat)
+    return transformer.lm_loss(params, batch, cfg, ctx, remat=remat)
+
+
+def forward(params, batch, cfg: ModelConfig, ctx: ShardCtx, remat: str = "none"):
+    """Logits for a full sequence (prefill-style pass)."""
+    if cfg.is_encoder_decoder:
+        enc = whisper.encode(params, batch["frames"], cfg, ctx, remat=remat)
+        return whisper.decode_train(params, batch["inputs"], enc, cfg, ctx, remat=remat)
+    return transformer.forward(params, batch["inputs"], cfg, ctx, remat=remat)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch is the argsort formulation (static shapes, TPU-friendly): flatten
+(token, k-choice) assignments, sort by expert, derive each assignment's
+position within its expert group arithmetically, drop past-capacity
+assignments, scatter into an (E, capacity, d) compute buffer, run the expert
+FFNs as one vmapped einsum, and combine with the routing gates.
+
+Parallelism (DESIGN.md §5): neither assigned MoE arch has expert counts
+divisible by the 16-way "model" axis (8, 40), so experts are NOT
+expert-sharded; instead expert FFN width f is TP-sharded over "model" and
+tokens over ("pod","data") — the caller wraps ``moe_ffn`` in shard_map and
+psums the partial w_down outputs (see blocks.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def init_moe(key, d: int, d_ff: int, num_experts: int, dtype):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e = num_experts
+    return {
+        "router": init_dense(kr, d, e, jnp.float32),  # router math in f32
+        "w_gate": jax.vmap(lambda k: init_dense(k, d, d_ff, dtype))(
+            jax.random.split(k1, e)
+        ),
+        "w_up": jax.vmap(lambda k: init_dense(k, d, d_ff, dtype))(
+            jax.random.split(k2, e)
+        ),
+        "w_down": jax.vmap(lambda k: init_dense(k, d_ff, d, dtype))(
+            jax.random.split(k3, e)
+        ),
+    }
+
+
+def moe_ffn(
+    x: jax.Array,  # (N, d) local tokens
+    params: dict,
+    *,
+    num_experts: int,
+    experts_per_token: int,
+    capacity_factor: float = 1.25,
+    token_chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (N, d), load-balance aux loss). If the expert weights are
+    f-slices (TP), ``out`` is a partial sum the caller must psum."""
+    if token_chunk is not None and x.shape[0] > token_chunk:
+        n = x.shape[0]
+        assert n % token_chunk == 0, (n, token_chunk)
+        xs = x.reshape(n // token_chunk, token_chunk, x.shape[1])
+        outs, auxes = jax.lax.map(
+            lambda xc: moe_ffn(
+                xc,
+                params,
+                num_experts=num_experts,
+                experts_per_token=experts_per_token,
+                capacity_factor=capacity_factor,
+            ),
+            xs,
+        )
+        return outs.reshape(n, x.shape[1]), jnp.mean(auxes)
+
+    n, d = x.shape
+    e, k = num_experts, experts_per_token
+    cap = max(1, math.ceil(k * n / e * capacity_factor))
+
+    logits = x.astype(jnp.float32) @ params["router"]  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_logit, top_e = jax.lax.top_k(logits, k)  # (N, k)
+    gates = jax.nn.softmax(top_logit, axis=-1)  # renormalize over chosen
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    density = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0
+    ) / k
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    # sort assignments by expert
+    flat_e = top_e.reshape(-1)  # (N*k,)
+    flat_t = jnp.repeat(jnp.arange(n), k)  # token of each assignment
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], flat_t[order]
+    starts = jnp.searchsorted(se, jnp.arange(e))  # first slot of each expert
+    pos = jnp.arange(n * k) - starts[se]  # position within expert group
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)  # overflow -> trash row
+
+    buf = jnp.zeros((e * cap + 1, d), dtype=x.dtype).at[slot].set(x[st])
+    ebuf = buf[:-1].reshape(e, cap, d)
+
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", ebuf, params["w_gate"])
+    ) * jnp.einsum("ecd,edf->ecf", ebuf, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, cap, d)
+
+    vals = y.reshape(e * cap, d)[jnp.minimum(slot, e * cap - 1)]
+    vals = jnp.where(keep[:, None], vals, 0.0)
+    w = gates.reshape(-1)[order][:, None].astype(x.dtype)
+    out = jnp.zeros((n, d), dtype=x.dtype).at[st].add(vals * w)
+    return out, aux

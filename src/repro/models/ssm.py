@@ -1,0 +1,267 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form + decode.
+
+Chunked SSD (Dao & Gu 2024, arXiv:2405.21060): split the sequence into chunks
+of Q positions; within a chunk the recurrence is evaluated as a masked-decay
+quadratic form (MXU matmuls); across chunks a short scan carries the (N x P)
+state. This is the TPU-friendly formulation: O(S Q) FLOPs in matmul shape
+instead of a length-S sequential scan.
+
+Layout: x (B, S, H, P) with H = d_inner/headdim SSD heads (sharded over
+"model": 80 and 64 both divide 16), B/C shared across heads (1 group).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+
+def init_mamba2(key, cfg, dtype):
+    """cfg: ModelConfig with ssm_* fields.
+
+    §Perf iteration B1 (EXPERIMENTS.md): ``cfg.mamba_split_proj`` replaces the
+    fused in_proj (whose [z|x|B|C|dt] channel layout splits at non-shard-
+    aligned offsets, forcing a full gather of the 2di+2n+h projection) with
+    per-stream projections whose output dims each shard cleanly: z/x TP on
+    d_inner (head-aligned), B/C/dt replicated (tiny). Same math, same total
+    parameter count."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    kin, kout, kconv, ka, kdt = jax.random.split(key, 5)
+    conv_ch = di + 2 * n  # conv runs over [x, B, C]
+    common = {
+        "out_proj": init_dense(kout, di, d, dtype),
+        "conv_w": (
+            jax.random.normal(kconv, (cfg.conv_width, conv_ch), jnp.float32) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = -exp(a_log), per head
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, h))), jnp.float32
+        ),
+        "norm_scale": jnp.ones((di,), dtype),  # gated RMSNorm pre-out_proj
+    }
+    if getattr(cfg, "mamba_split_proj", False):
+        kz, kx, kb, kc, kd = jax.random.split(kin, 5)
+        return {
+            "z_proj": init_dense(kz, d, di, dtype),
+            "x_proj": init_dense(kx, d, di, dtype),
+            "b_proj": init_dense(kb, d, n, dtype),
+            "c_proj": init_dense(kc, d, n, dtype),
+            "dt_proj": init_dense(kd, d, h, dtype),
+            **common,
+        }
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": init_dense(kin, d, 2 * di + 2 * n + h, dtype),
+        **common,
+    }
+
+
+def _split_proj(proj, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * n], axis=-1)
+    return z, xbc, dt  # (..., di), (..., di+2n), (..., h)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d over (B, S, C) with kernel (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):  # width is 4: unrolled taps
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum_chunk(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decay increments -> (..., Q, Q) lower-triangular
+    cumulative sums L[i,j] = sum_{t=j+1..i} a_t (NEG_INF above diagonal)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_(j..i]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — post-softplus step sizes
+    a: jax.Array,  # (H,) negative decay rates (A)
+    b_mat: jax.Array,  # (B, S, N)
+    c_mat: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, N, P) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,N,P))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = b_mat.reshape(bsz, nc, q, n)
+    cc = c_mat.reshape(bsz, nc, q, n)
+
+    da = dtc * a[None, None, None, :]  # (B, nc, Q, H) log-decay increments
+    seg = jnp.cumsum(da, axis=2)  # (B, nc, Q, H) decay from chunk start
+
+    # --- intra-chunk (quadratic within chunk, matmul-shaped) ---
+    l_full = jnp.exp(_segsum_chunk(da.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+    g = jnp.einsum("bcqn,bcsn->bcqs", cc, bc,
+                   preferred_element_type=jnp.float32)  # (B,nc,Q,S')
+    xw = xc * dtc[..., None]  # dt-weighted inputs
+    y_intra = jnp.einsum(
+        "bcqs,bchqs,bcshp->bcqhp", g, l_full, xw,
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk summary states: decay-to-end weighted outer products ---
+    decay_end = jnp.exp(seg[:, :, -1:, :] - seg)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcsn,bcshp,bcsh->bchnp", bc, xw, decay_end,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,N,P)
+
+    # --- inter-chunk scan carrying the (N,P) state per head ---
+    chunk_decay = jnp.exp(seg[:, :, -1, :])  # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state ENTERING this chunk
+
+    init = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    final, entering = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum(
+        "bcqn,bchnp,bcqh->bcqhp", cc, entering, jnp.exp(seg),
+        preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def _project_streams(x, params, cfg):
+    """-> (z, x_pre, b_pre, c_pre, dt_raw) pre-conv streams, both layouts."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    if "in_proj" in params:
+        proj = x @ params["in_proj"]
+        z, xbc_pre, dt_raw = _split_proj(proj, cfg)
+        xp, bp, cp = jnp.split(xbc_pre, [di, di + n], axis=-1)
+        return z, xp, bp, cp, dt_raw
+    return (
+        x @ params["z_proj"],
+        x @ params["x_proj"],
+        x @ params["b_proj"],
+        x @ params["c_proj"],
+        x @ params["dt_proj"],
+    )
+
+
+def mamba2_forward(
+    x: jax.Array,  # (B, S, d)
+    params: dict,
+    cfg,
+    state: dict | None = None,
+    constrain_heads=None,
+) -> tuple[jax.Array, dict]:
+    """Full Mamba2 block (prefill/train path). Returns (out, new_state)."""
+    from repro.models.layers import rms_norm
+
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    bsz, s, _ = x.shape
+
+    z, xp, bp, cp, dt_raw = _project_streams(x, params, cfg)
+    if "in_proj" in params:
+        xbc_pre = jnp.concatenate([xp, bp, cp], axis=-1)
+        xbc = _causal_conv(xbc_pre, params["conv_w"], params["conv_b"])
+        xin, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    else:
+        # per-stream conv keeps the x-stream heads-sharded end to end (B1)
+        w, cb = params["conv_w"], params["conv_b"]
+        xin = _causal_conv(xp, w[:, :di], cb[:di])
+        b_mat = _causal_conv(bp, w[:, di : di + n], cb[di : di + n])
+        c_mat = _causal_conv(cp, w[:, di + n :], cb[di + n :])
+        xbc_pre = jnp.concatenate([xp, bp, cp], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    xh = xin.reshape(bsz, s, h, p)
+    if constrain_heads is not None:
+        xh = constrain_heads(xh)
+    y, final = ssd_chunked(xh, dt, a, b_mat, c_mat, cfg.ssm_chunk)
+    if constrain_heads is not None:
+        y = constrain_heads(y)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2 norm_before_gate=False): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+
+    # last (conv_width-1) pre-conv channels for decode continuation (left-pad
+    # with zeros when the prefill was shorter than the conv receptive field)
+    w1 = cfg.conv_width - 1
+    conv_tail = jnp.pad(xbc_pre, ((0, 0), (max(w1 - s, 0), 0), (0, 0)))[:, -w1:, :]
+    new_state = {"ssm": final, "conv": conv_tail}
+    return out, new_state
+
+
+def mamba2_decode_step(
+    x: jax.Array,  # (B, 1, d)
+    params: dict,
+    cfg,
+    state: dict,  # {"ssm": (B,H,N,P), "conv": (B, W-1, di+2n)}
+) -> tuple[jax.Array, dict]:
+    """Single-token recurrent update: O(1) state, no sequence dimension."""
+    from repro.models.layers import rms_norm
+
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    bsz = x.shape[0]
+
+    z, xp, bp, cp, dt_raw = _project_streams(x[:, 0, :], params, cfg)
+    xbc_new = jnp.concatenate([xp, bp, cp], axis=-1)
+
+    # rolling causal conv over the last conv_width inputs
+    conv_buf = jnp.concatenate([state["conv"], xbc_new[:, None, :]], axis=1)
+    w = params["conv_w"].astype(jnp.float32)  # (W, C)
+    xbc = jnp.einsum("bwc,wc->bc", conv_buf.astype(jnp.float32), w)
+    xbc = jax.nn.silu(xbc + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    xin, b_mat, c_mat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])
+    a = -jnp.exp(params["a_log"])
+
+    xh = xin.reshape(bsz, h, p).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])  # (B,H)
+    hs = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", b_mat.astype(jnp.float32), xh, dt
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_mat.astype(jnp.float32), hs)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"ssm": hs, "conv": conv_buf[:, 1:, :]}

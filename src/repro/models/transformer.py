@@ -1,0 +1,196 @@
+"""Decoder-only LM assembly: init + forward for all LM-family architectures.
+
+Layers are stacked (leading L dim) and executed with jax.lax.scan for compact
+HLO (one layer body regardless of depth — essential for 95-layer configs on
+512 simulated devices). Heterogeneous (hybrid) stacks scan contiguous Mamba
+segments and unroll the few attention blocks. Activation rematerialization is
+applied to the scan body per ``remat`` policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import init_embedding, rms_norm
+from repro.sharding.specs import ShardCtx
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "nothing_saveable",
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    policy = getattr(jax.checkpoint_policies, REMAT_POLICIES[remat])
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": init_embedding(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        from repro.models.layers import init_dense
+
+        params["lm_head"] = init_dense(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: blk.init_dense_block(k, cfg, dtype)
+        )(keys)
+    elif cfg.family == "moe":
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: blk.init_moe_block(k, cfg, dtype)
+        )(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: blk.init_mamba_block(k, cfg, dtype)
+        )(keys)
+    elif cfg.family == "hybrid":
+        n_mamba = cfg.num_layers - len(cfg.attn_block_positions)
+        keys = jax.random.split(k_layers, n_mamba)
+        params["layers"] = jax.vmap(
+            lambda k: blk.init_mamba_block(k, cfg, dtype)
+        )(keys)
+        # ONE shared attention block applied at every attn position (zamba2)
+        params["shared_attn"] = blk.init_dense_block(k_shared, cfg, dtype)
+    else:
+        raise ValueError(f"init_lm does not handle family {cfg.family}")
+    return params
+
+
+def _hybrid_segments(cfg: ModelConfig) -> list[int]:
+    """Lengths of the contiguous Mamba runs between/around the attention
+    positions. zamba2 (38 blocks, attn at 9 & 28) -> [9, 18, 9]."""
+    runs, prev_end = [], 0
+    for pos in sorted(cfg.attn_block_positions):
+        runs.append(pos - prev_end)
+        prev_end = pos + 1
+    runs.append(cfg.num_layers - prev_end)
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: dict,
+    tokens: jax.Array,  # (B, S) int32 — or (B, S, d) precomputed embeddings
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    remat: str = "full",
+) -> jax.Array:
+    """Token (or stub-frontend embedding) input -> logits (B, S, vocab_padded)."""
+    if tokens.ndim == 2:
+        tokens = ctx.tokens(tokens)
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = tokens.astype(_dtype(cfg))  # [vlm]/[audio] stub embeddings
+    s = x.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    x = ctx.residual(x)
+
+    if cfg.family in ("dense", "vlm"):
+
+        def body(h, lp):
+            return blk.dense_block(h, lp, cfg, ctx, pos), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    elif cfg.family == "moe":
+
+        def body(h, lp):
+            h, aux = blk.moe_block(h, lp, cfg, ctx, pos)
+            return h, aux
+
+        x, _aux = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    elif cfg.family == "ssm":
+
+        def body(h, lp):
+            return blk.mamba_block(h, lp, cfg, ctx), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+    elif cfg.family == "hybrid":
+
+        def body(h, lp):
+            return blk.mamba_block(h, lp, cfg, ctx), None
+
+        rematted = _maybe_remat(body, remat)
+
+        def attn_apply(h, shared_params):
+            return blk.hybrid_attn_block(h, shared_params, cfg, ctx, pos)
+
+        if remat != "none":
+            policy = getattr(jax.checkpoint_policies, REMAT_POLICIES[remat])
+            attn_apply = jax.checkpoint(attn_apply, policy=policy)
+
+        runs = _hybrid_segments(cfg)
+        off = 0
+        for i, ln in enumerate(runs):
+            if ln > 0:
+                seg = jax.tree_util.tree_map(
+                    lambda a, o=off, n=ln: a[o : o + n], params["layers"]
+                )
+                x, _ = jax.lax.scan(rematted, x, seg)
+                off += ln
+            if i < len(runs) - 1:  # shared attention block between runs
+                x = attn_apply(x, params["shared_attn"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = ctx.gathered(x)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )  # (d, Vp)
+    logits = x @ head
+    return ctx.logits(logits)
+
+
+def lm_loss(
+    params: dict,
+    batch: dict,  # {"inputs": (B,S), "targets": (B,S), "mask": (B,S)}
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    remat: str = "full",
+) -> tuple[jax.Array, dict]:
+    logits = forward(params, batch["inputs"], cfg, ctx, remat=remat)
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    mask = batch["mask"].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    if ctx.onehot_loss:
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+        label_logit = jnp.sum(logits * onehot, axis=-1)
+    else:
+        label_logit = jnp.take_along_axis(
+            logits, targets[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+    nll = (lse - label_logit) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    metrics = {"loss": loss, "ntokens": mask.sum()}
+    return loss, metrics

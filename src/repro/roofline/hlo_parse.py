@@ -1,0 +1,350 @@
+"""Trip-count-aware HLO accounting.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a scan-over-95-
+layers model reports one layer's FLOPs (verified empirically; see
+EXPERIMENTS.md §Dry-run methodology). This parser rebuilds totals from the
+post-SPMD optimized HLO text:
+
+* computations are parsed with their instructions (opcode, result shape);
+* ``while`` trip counts are recovered from the loop-condition's compare-
+  against-constant (how jax.lax.scan lowers);
+* an execution-count map is propagated through the call graph
+  (while bodies x trip count, fusions/calls x call sites);
+* dot/convolution FLOPs are recomputed from operand shapes and contracting
+  dims; collective bytes from per-device result sizes.
+
+Shapes in post-SPMD HLO are PER-DEVICE, so all totals are per-device per
+step — exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$")
+_TRIP_RE = re.compile(r'known_trip_count"?[:=]\s*\{"?n"?[:=]\s*"?(\d+)"?')
+_CALLEE_BRACE_RE = re.compile(r"(\w+)=\{([^}]*)\}")
+_CALLEE_SINGLE_RE = re.compile(r"(body|condition|to_apply|calls)=%?([\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes mentioned in a result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        m = _COMP_START_RE.match(line.strip())
+        if m and line.strip().endswith("{"):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(
+                Instr(im.group(1), im.group(3), im.group(2), line.strip())
+            )
+    return comps
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dot_flops(instr: Instr, symbols: dict[str, list[int]]) -> int:
+    """2 * prod(result dims) * prod(lhs contracting dims).
+
+    Scheduled HLO omits operand types inside the call parens, so the lhs
+    shape is resolved through the module-wide symbol table (name -> dims)."""
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    res = _shape_dims(instr.result_type)
+    if not res:
+        return 0
+    out_elems = int(np.prod(res[0][1])) if res[0][1] else 1
+    contracted = 1
+    # operand list: text between the opcode's '(' and the matching ')'
+    args = instr.line.split(f"{instr.opcode}(", 1)[-1]
+    names = _OPERAND_RE.findall(args)
+    if mm and names:
+        # inline-typed operand (unscheduled HLO) takes precedence
+        typed = re.match(r"\s*(\w+)\[([\d,]*)\]", args)
+        if typed and typed.group(1) in _DTYPE_BYTES:
+            lhs_dims = [int(d) for d in typed.group(2).split(",") if d]
+        else:
+            lhs_dims = symbols.get(names[0], [])
+        for ci in mm.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                contracted *= lhs_dims[int(ci)]
+    return 2 * out_elems * contracted
+
+
+def build_symbols(
+    comps: dict[str, Computation],
+) -> tuple[dict[str, list[int]], dict[str, int]]:
+    """name -> (result dims, dtype byte width) for every instruction (names
+    are unique module-wide in post-optimization HLO; collisions keep the last
+    writer, which is fine for operand lookups)."""
+    table: dict[str, list[int]] = {}
+    widths: dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            dims = _shape_dims(ins.result_type)
+            if dims:
+                table[ins.name] = dims[0][1]
+                widths[ins.name] = _DTYPE_BYTES.get(dims[0][0], 4)
+    return table, widths
+
+
+def _trip_count(instr: Instr, comps: dict[str, Computation]) -> int:
+    """Trip count of a while op: the compiler's known_trip_count when present
+    (jax scans always carry it), else the condition's compare constant."""
+    m = _TRIP_RE.search(instr.line)
+    if m:
+        return int(m.group(1))
+    cond = next((c for k, c in _callees(instr) if k == "condition"), None)
+    best = 1
+    if cond in comps:
+        for ins in comps[cond].instrs:
+            if ins.opcode == "constant":
+                cm = re.search(r"constant\((\d+)\)", ins.line)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+    return best
+
+
+_CALLEE_KEYS = ("body", "condition", "to_apply", "calls", "branch_computations")
+
+
+def _callees(instr: Instr) -> list[tuple[str, str]]:
+    """(kind, computation_name) referenced by an instruction."""
+    out = []
+    for m in _CALLEE_BRACE_RE.finditer(instr.line):
+        key, inner = m.group(1), m.group(2)
+        if key not in _CALLEE_KEYS:
+            continue
+        for name in inner.split(","):
+            name = name.strip().lstrip("%")
+            if name:
+                out.append((key, name))
+    for m in _CALLEE_SINGLE_RE.finditer(instr.line):
+        out.append((m.group(1), m.group(2)))
+    return out
+
+
+def execution_counts(comps: dict[str, Computation]) -> dict[str, int]:
+    """Executions per computation, propagating while trip counts."""
+    counts = {name: 0 for name in comps}
+    entry = None
+    for name in comps:
+        # ENTRY computation: jax names it e.g. main.NNN; detect by not being
+        # referenced anywhere
+        entry = name
+    referenced = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            for _, callee in _callees(ins):
+                referenced.add(callee)
+    roots = [n for n in comps if n not in referenced]
+
+    def visit(name: str, mult: int, depth=0):
+        if name not in comps or depth > 50:
+            return
+        counts[name] += mult
+        for ins in comps[name].instrs:
+            callees = _callees(ins)
+            if ins.opcode == "while":
+                body = next((c for k, c in callees if k == "body"), None)
+                cond = next((c for k, c in callees if k == "condition"), None)
+                trips = _trip_count(ins, comps)
+                if body:
+                    visit(body, mult * trips, depth + 1)
+                if cond:
+                    visit(cond, mult * (trips + 1), depth + 1)
+            else:
+                for _, callee in callees:
+                    visit(callee, mult, depth + 1)
+
+    for r in roots:
+        visit(r, 1)
+    return counts
+
+
+@dataclass
+class HloTotals:
+    dot_flops: float
+    bytes_materialized: float  # writes + reads (HBM traffic proxy)
+    collective_bytes: float
+    collective_ops: dict
+    per_comp_trips: dict
+    top_bytes: list  # largest (bytes*execs, opcode, name) contributors
+
+
+def _instr_bytes(
+    ins: Instr,
+    symbols: dict[str, list[int]],
+    dtype_bytes_of: dict[str, int],
+    slicing: bool = False,
+) -> float:
+    """HBM traffic of one top-level instruction: result write + operand reads.
+
+    * In-place updates (dynamic-update-slice / scatter, possibly fused) alias
+      their big buffer operand: the untouched region is neither rewritten nor
+      reread, so the largest operand is subtracted from both sides.
+    * ``slicing`` fusions (internal dynamic-slice) read at most a result-sized
+      window of each oversized operand (e.g. one layer of a stacked cache)."""
+    write = _shape_bytes(ins.result_type)
+    args = ins.line.split(f"{ins.opcode}(", 1)[-1]
+    op_sizes = []
+    for name in _OPERAND_RE.findall(args):
+        dims = symbols.get(name)
+        if dims is None:
+            continue
+        elems = int(np.prod(dims)) if dims else 1
+        op_sizes.append(elems * dtype_bytes_of.get(name, 4))
+    if slicing and write > 0:
+        op_sizes = [min(s, 2 * write) for s in op_sizes]
+    reads = sum(op_sizes)
+    if "dynamic-update-slice" in ins.line or ins.opcode == "scatter" or (
+        "scatter" in ins.name
+    ):
+        big = max(op_sizes, default=0)
+        write = max(write - big, 0)
+        reads = max(reads - big, 0)
+    return float(write + reads)
+
+
+# ops that never materialize a new buffer (aliasing / metadata only).
+# "while"/"conditional" results alias their body buffers (bodies are counted).
+_NO_MATERIALIZE = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "while", "conditional", "copy-start", "copy-done",
+}
+
+
+def _fused_computations(comps: dict[str, Computation]) -> set[str]:
+    """Computations reached via calls/to_apply (fusion bodies, reducers):
+    their instructions do not materialize buffers — only the caller's output
+    does. body/condition/branch computations DO run at top level."""
+    fused = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            for kind, callee in _callees(ins):
+                if kind in ("calls", "to_apply"):
+                    fused.add(callee)
+    return fused
+
+
+def analyze(text: str) -> HloTotals:
+    comps = parse_hlo(text)
+    counts = execution_counts(comps)
+    fused = _fused_computations(comps)
+    symbols, widths = build_symbols(comps)
+    flops = 0.0
+    coll_bytes = 0.0
+    mat_bytes = 0.0
+    coll_ops: dict[str, float] = {}
+    top: list[tuple[float, str, str]] = []
+    # opcode sets per computation, for detecting slicing fusions
+    opset = {
+        n: {i.opcode for i in c.instrs} for n, c in comps.items()
+    }
+    for name, comp in comps.items():
+        mult = max(counts.get(name, 0), 0)
+        if mult == 0:
+            continue
+        materializes = name not in fused
+        for ins in comp.instrs:
+            # FLOPs counted everywhere (dots live inside fusions too)
+            if ins.opcode in ("dot", "convolution"):
+                flops += mult * _dot_flops(ins, symbols)
+            if not materializes or ins.opcode in _NO_MATERIALIZE:
+                continue
+            slicing = ins.opcode in ("dynamic-slice", "slice", "gather") or (
+                ins.opcode == "fusion"
+                and any(
+                    op in ("dynamic-slice", "slice", "gather")
+                    for _, callee in _callees(ins)
+                    for op in opset.get(callee, ())
+                )
+            )
+            b = _instr_bytes(ins, symbols, widths, slicing=slicing)
+            mat_bytes += mult * b
+            if b * mult > 0:
+                top.append((b * mult, ins.opcode, f"{name}/{ins.name}"))
+            if ins.opcode in COLLECTIVES or any(
+                ins.opcode.startswith(c) for c in COLLECTIVES
+            ):
+                # collective wire bytes: the (per-device) payload, counted once
+                w = _shape_bytes(ins.result_type)
+                coll_bytes += mult * w
+                coll_ops[ins.opcode] = coll_ops.get(ins.opcode, 0) + mult * w
+    top.sort(reverse=True)
+    return HloTotals(
+        dot_flops=flops,
+        bytes_materialized=mat_bytes,
+        collective_bytes=coll_bytes,
+        collective_ops=coll_ops,
+        per_comp_trips={n: c for n, c in counts.items() if c > 1},
+        top_bytes=top[:12],
+    )

@@ -1,0 +1,9 @@
+"""Target-hardware constants: TPU v5e (per chip), per the assignment."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip (bf16 MXU)
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 45e9  # bytes/s per link (assignment: ~50 GB/s; we use 45 sustained)
+VMEM_BYTES = 16 * 2**20  # ~16 MiB per core working set
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,79 @@
+"""Batched serving loop: continuous decode over a request batch.
+
+Small but real: greedy sampling, per-request lengths, EOS termination, and
+token-by-token prefill through the same serve_step (exactness over speed on
+this CPU container; on TPU the prefill cells lower the full forward pass).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.decode import serve_step
+from repro.serve.kvcache import plan_cache, zeros_cache
+from repro.sharding.specs import ShardCtx
+
+
+@dataclass
+class ServeResult:
+    tokens: np.ndarray  # (B, max_new) generated ids
+    steps: int
+    finished: np.ndarray
+
+
+class Engine:
+    def __init__(
+        self,
+        params: dict,
+        cfg: ModelConfig,
+        ctx: ShardCtx,
+        batch: int,
+        context_len: int,
+        eos_id: int = 2,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.plan = plan_cache(cfg, batch, context_len)
+        self.cache = zeros_cache(cfg, self.plan)
+        self.lengths = jnp.zeros((batch,), jnp.int32)
+        self.eos_id = eos_id
+        self._step = jax.jit(
+            lambda p, t, c, l: serve_step(p, t, c, l, cfg, ctx)
+        )
+
+    def ingest(self, prompts: np.ndarray) -> jax.Array:
+        """Token-by-token prefill of (B, S_prompt). Returns last logits."""
+        logits = None
+        for s in range(prompts.shape[1]):
+            tok = jnp.asarray(prompts[:, s : s + 1], jnp.int32)
+            logits, self.cache = self._step(
+                self.params, tok, self.cache, self.lengths
+            )
+            self.lengths = self.lengths + 1
+        return logits
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16) -> ServeResult:
+        b = prompts.shape[0]
+        logits = self.ingest(prompts)
+        out = np.zeros((b, max_new), np.int32)
+        finished = np.zeros((b,), bool)
+        for i in range(max_new):
+            nxt = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(
+                jnp.int32
+            )
+            out[:, i] = np.asarray(nxt)
+            finished |= np.asarray(nxt) == self.eos_id
+            if finished.all():
+                out = out[:, : i + 1]
+                break
+            logits, self.cache = self._step(
+                self.params, nxt[:, None], self.cache, self.lengths
+            )
+            self.lengths = self.lengths + 1
+        return ServeResult(tokens=out, steps=int(self.lengths[0]), finished=finished)

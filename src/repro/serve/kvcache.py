@@ -1,0 +1,139 @@
+"""KV/state cache structures for decoding, per architecture family.
+
+Layouts (DESIGN.md §5):
+* attention cache: (L, B, T, KV, hd) x2, sharded (batch->dp, T->"model") —
+  sequence-sharded so 32k/500k caches split across the TP axis; attention over
+  the shards is the distributed flash-decode in decode.py.
+* SWA (mixtral): ring buffer of size window — the reason long_500k is feasible
+  for a quadratic-attention arch.
+* SSM state: (L, B, H, N, P) + conv tail (L, B, W-1, C) — O(1) in context.
+* whisper: decoder self cache + precomputed cross K/V over encoder frames.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class CachePlan:
+    """Static description of a model's decode cache (also used to build
+    ShapeDtypeStructs for the dry-run without allocating)."""
+
+    kind: str  # "attn" | "ssm" | "hybrid" | "encdec"
+    attn_len: int  # T dimension of the attention cache (window for SWA)
+    batch: int
+
+
+def plan_cache(cfg: ModelConfig, batch: int, context_len: int) -> CachePlan:
+    attn_len = context_len
+    if cfg.sliding_window is not None:
+        attn_len = min(cfg.sliding_window, context_len)
+    if cfg.family == "ssm":
+        kind = "ssm"
+    elif cfg.family == "hybrid":
+        kind = "hybrid"
+    elif cfg.is_encoder_decoder:
+        kind = "encdec"
+    else:
+        kind = "attn"
+    return CachePlan(kind=kind, attn_len=attn_len, batch=batch)
+
+
+def _attn_cache_struct(cfg, n_layers, batch, t, dtype):
+    shape = (n_layers, batch, t, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        # absolute positions held in each slot (ring buffers wrap): (L? no —
+        # positions are shared across layers) (B, T) int32
+        "pos": jax.ShapeDtypeStruct((batch, t), jnp.int32),
+    }
+
+
+def _ssm_cache_struct(cfg, n_layers, batch, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+        "conv": jax.ShapeDtypeStruct(
+            (n_layers, batch, cfg.conv_width - 1, conv_ch), dtype
+        ),
+    }
+
+
+def cache_struct(cfg: ModelConfig, plan: CachePlan) -> dict:
+    """ShapeDtypeStruct pytree of the cache (allocate with zeros_like_struct)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = plan.batch, plan.attn_len
+    if plan.kind == "attn":
+        return {"attn": _attn_cache_struct(cfg, cfg.num_layers, b, t, dtype)}
+    if plan.kind == "ssm":
+        return {"ssm": _ssm_cache_struct(cfg, cfg.num_layers, b, dtype)}
+    if plan.kind == "hybrid":
+        n_attn = len(cfg.attn_block_positions)
+        n_mamba = cfg.num_layers - n_attn
+        return {
+            "ssm": _ssm_cache_struct(cfg, n_mamba, b, dtype),
+            "attn": _attn_cache_struct(cfg, n_attn, b, t, dtype),
+        }
+    if plan.kind == "encdec":
+        # cross cache length padded to a shardable multiple (512); the decode
+        # path masks slots >= encoder_ctx
+        t_enc = ((cfg.encoder_ctx + 511) // 512) * 512
+        return {
+            "attn": _attn_cache_struct(cfg, cfg.num_layers, b, t, dtype),
+            "cross": _attn_cache_struct(cfg, cfg.num_layers, b, t_enc, dtype),
+        }
+    raise ValueError(plan.kind)
+
+
+def zeros_cache(cfg: ModelConfig, plan: CachePlan) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_struct(cfg, plan)
+    )
+
+
+def cache_specs(cfg: ModelConfig, plan: CachePlan, ctx) -> dict:
+    """PartitionSpec tree matching cache_struct (DESIGN.md §5 decode layout:
+    batch over dp where divisible, cache seq over "model" + leftover dp)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.serve.decode import decode_layout
+
+    ba, sa = decode_layout(ctx, plan.batch)
+
+    def attn_spec():
+        return {
+            "k": P(None, ba, sa, None, None),
+            "v": P(None, ba, sa, None, None),
+            "pos": P(ba, sa),
+        }
+
+    out: dict = {}
+    struct = cache_struct(cfg, plan)
+    if "attn" in struct:
+        out["attn"] = attn_spec()
+    if "cross" in struct:
+        out["cross"] = attn_spec()
+    if "ssm" in struct:
+        out["ssm"] = {
+            "ssm": P(None, ba, "model", None, None),  # SSD heads TP-sharded
+            "conv": P(None, ba, None, None),
+        }
+    return out
+
+
+def cache_bytes(cfg: ModelConfig, plan: CachePlan) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(cache_struct(cfg, plan)):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total

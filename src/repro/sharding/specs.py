@@ -1,0 +1,160 @@
+"""Sharding rules: logical activation/param layouts -> PartitionSpecs.
+
+Strategy (DESIGN.md §5), uniform across all 10 archs on the prescribed meshes
+(16,16)=("data","model") and (2,16,16)=("pod","data","model"):
+
+* batch            -> ("pod","data")   [pure DP across pods]
+* residual seq     -> "model"          [Megatron-style sequence parallelism]
+* attention        -> query-seq sharded over "model" (sp_q), K/V gathered
+* d_ff / vocab / SSD heads / expert-ffn width -> "model" (TP)
+* params & optimizer state -> FSDP over "data", TP over "model", replicated
+  over "pod" (keeps the slow inter-pod axis out of the all-gather path)
+* decode KV cache  -> (batch -> "data", cache seq -> "model") + flash-decode
+
+``ShardCtx`` carries the mesh; with mesh=None every constraint is a no-op so
+the same model code runs in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclass
+class ShardCtx:
+    mesh: Mesh | None
+    # axes already bound manually by an enclosing shard_map (e.g. "pod" in the
+    # compressed-gradient path) — they must not appear in inner specs
+    manual_axes: tuple[str, ...] = ()
+    # §Perf iteration A1 (EXPERIMENTS.md): pin shardings on sublayer outputs
+    # and TP intermediates so backward cotangents reduce-scatter instead of
+    # all-reducing full activations. Default ON (validated win); settable to
+    # False to reproduce the paper-faithful baseline measurements.
+    tuned: bool = True
+    # §Perf A8: select label logits with a one-hot contraction instead of
+    # take_along_axis — gathers over vocab-sharded logits hit an XLA SPMD
+    # partitioner assert inside partial-manual (pod) shard_maps.
+    onehot_loss: bool = False
+
+    @property
+    def dp(self):  # the data-parallel axis bundle
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in dp_axes(self.mesh) if a not in self.manual_axes)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # --- logical activation layouts -------------------------------------
+    def residual(self, x):  # (B, S, d): seq-parallel residual stream
+        return self.constrain(x, P(self.dp, "model", None))
+
+    def gathered(self, x):  # (B, S, d): sequence gathered (MLP/MoE/SSM entry)
+        return self.constrain(x, P(self.dp, None, None))
+
+    def ffn_hidden(self, x):  # (B, S, f): TP intermediate
+        return self.constrain(x, P(self.dp, None, "model"))
+
+    def kv_gathered(self, x):  # (B, Skv, KV, hd): replicated K/V for sp_q attn
+        return self.constrain(x, P(self.dp, None, None, None))
+
+    def heads_sharded(self, x):  # (B, S, H, P): SSD/attn heads on "model"
+        return self.constrain(x, P(self.dp, None, "model", None))
+
+    def logits(self, x):  # (B, S, V): vocab-TP logits
+        return self.constrain(x, P(self.dp, None, "model"))
+
+    def tokens(self, x):  # (B, S) int
+        return self.constrain(x, P(self.dp, None))
+
+    def kv_cache(self, x):  # (B, T, KV, hd): decode cache, seq on "model"
+        return self.constrain(x, P(self.dp, "model", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs — resolved by leaf path name patterns
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: tuple[tuple[tuple[str, ...], P], ...] = (
+    # embeddings / head: vocab-TP + FSDP
+    (("embed",), P("model", "data")),
+    (("lm_head",), P("data", "model")),
+    # attention projections
+    (("wq",), P("data", "model")),
+    (("wk",), P("data", "model")),
+    (("wv",), P("data", "model")),
+    (("wo",), P("model", "data")),
+    # dense MLP
+    (("w_gate",), P("data", "model")),
+    (("w_up",), P("data", "model")),
+    (("w_down",), P("model", "data")),
+    # MoE (leading expert dim; matched before the dense rules in _spec_for)
+    (("moe", "w_gate"), P(None, "data", "model")),
+    (("moe", "w_up"), P(None, "data", "model")),
+    (("moe", "w_down"), P(None, "model", "data")),
+    (("moe", "router"), P("data", None)),
+    # mamba2
+    (("in_proj",), P("data", "model")),
+    (("out_proj",), P("model", "data")),
+    (("conv_w",), P(None, "model")),
+    (("conv_b",), P("model",)),
+    (("norm_scale",), P("model",)),
+)
+
+
+def _spec_for(path: tuple[str, ...], ndim: int) -> P:
+    """Match the most specific rule whose name parts all appear in the path
+    (in order); pad with leading Nones for stacked-layer dims."""
+    best: tuple[int, P] | None = None
+    for names, spec in _PARAM_RULES:
+        idx = 0
+        for part in path:
+            if idx < len(names) and names[idx] == part:
+                idx += 1
+        if idx == len(names):
+            if best is None or len(names) > best[0]:
+                best = (len(names), spec)
+    if best is None:
+        return P()  # replicate (norm scales, biases, scalars)
+    spec = best[1]
+    pad = ndim - len(spec)
+    if pad < 0:  # rank-reduced leaf (e.g. smoke shapes) — replicate
+        return P()
+    return P(*([None] * pad), *spec)
+
+
+def param_specs(params: Any, serve: bool = False) -> Any:
+    """Pytree of PartitionSpecs matching a params pytree.
+
+    ``serve=True`` (§Perf C3): drop the FSDP ("data") factor and keep TP only
+    — decoding re-reads weights every token, so FSDP's per-token all-gathers
+    dominate decode collectives; TP-only weights trade HBM for zero gathers."""
+
+    def walk(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p)
+            for p in path
+        )
+        ndim = getattr(leaf, "ndim", 0)
+        spec = _spec_for(names, ndim)
+        if serve:
+            spec = P(*[None if ax == "data" else ax for ax in spec])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params)
+    )

@@ -1,0 +1,160 @@
+"""DROP-based low-rank gradient compression (beyond-paper integration).
+
+The paper's insight — highly structured matrices admit aggressive sampling-
+based PCA with a distance-preservation target — applies to gradient matrices
+in large-scale training: per-layer gradients are famously low-rank (PowerSGD,
+GaLore). Here DROP *discovers* the rank from a TLB-style preservation target
+instead of fixing it a priori:
+
+* every ``refresh_every`` steps, the host runs DROP on the (reshaped) gradient
+  matrix of each compressible parameter -> basis V_i (c x r_i);
+* between refreshes, the cross-POD all-reduce runs in the r-dim basis:
+  psum(G V) V^T, cutting inter-pod bytes by r/c;
+* PowerSGD-style error feedback accumulates the per-pod compression residual
+  into the next step's gradient so the optimizer sees an unbiased long-run
+  signal.
+
+This targets the collective roofline term of multi-pod training (the "pod"
+axis is the slow DCN/ICI link) — see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GradCompressConfig:
+    target_tlb: float = 0.90  # distance preservation on gradient rows
+    max_rank: int = 64
+    min_cols: int = 256  # only compress matrices with >= this many columns
+    refresh_every: int = 50
+
+
+def compressible(path_names: tuple[str, ...], leaf) -> bool:
+    """2D+ weight matrices only (never norms/scalars/embeddings)."""
+    if getattr(leaf, "ndim", 0) < 2:
+        return False
+    if "embed" in path_names:  # embedding grads are sparse-ish; keep exact
+        return False
+    return True
+
+
+def _as_matrix(g: jax.Array) -> jax.Array:
+    """Collapse leading dims: (..., c) -> (r, c)."""
+    return g.reshape(-1, g.shape[-1])
+
+
+def discover_basis(
+    grad_matrix: np.ndarray, cfg: GradCompressConfig, seed: int = 0
+) -> np.ndarray | None:
+    """Run DROP on gradient rows to find a TLB-preserving basis (host side).
+
+    Returns V (c, r) with r <= max_rank, or None when DROP finds no useful
+    compression (r too close to c)."""
+    from repro.core import DropConfig, drop
+    from repro.core.cost import zero_cost
+
+    m, c = grad_matrix.shape
+    if c < cfg.min_cols or m < 32:
+        return None
+    res = drop(
+        grad_matrix.astype(np.float32),
+        DropConfig(
+            target_tlb=cfg.target_tlb,
+            search="prefix",
+            seed=seed,
+            schedule=(0.05, 0.1, 0.25, 0.5),
+            max_pairs=1600,
+        ),
+        cost=zero_cost(),
+    )
+    if not res.satisfied:
+        return None  # gradients not low-rank enough at this TLB target
+    r = min(res.k, cfg.max_rank)
+    if r >= c // 2:  # not worth the two extra matmuls
+        return None
+    return np.asarray(res.v[:, :r], dtype=np.float32)
+
+
+def compress_tree(grads: Any, bases: dict[str, jax.Array]) -> Any:
+    """Project gradients into their DROP bases (identity where no basis)."""
+
+    def fn(path, g):
+        name = _path_key(path)
+        v = bases.get(name)
+        if v is None:
+            return g
+        gm = _as_matrix(g).astype(jnp.float32)
+        return (gm @ v).astype(jnp.float32)  # (r_rows, r)
+
+    return jax.tree_util.tree_map_with_path(fn, grads)
+
+
+def expand_tree(compressed: Any, grads_like: Any, bases: dict[str, jax.Array]) -> Any:
+    def fn(path, c, like):
+        name = _path_key(path)
+        v = bases.get(name)
+        if v is None:
+            return c
+        return (c @ v.T).reshape(like.shape).astype(like.dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, c, l: fn(p, c, l), compressed, grads_like
+    )
+
+
+def compression_residual(grads: Any, bases: dict[str, jax.Array]) -> Any:
+    """e = G - (G V) V^T, for error feedback."""
+
+    def fn(path, g):
+        name = _path_key(path)
+        v = bases.get(name)
+        if v is None:
+            return jnp.zeros_like(g)
+        gm = _as_matrix(g).astype(jnp.float32)
+        approx = (gm @ v) @ v.T
+        return (gm - approx).reshape(g.shape).astype(g.dtype)
+
+    return jax.tree_util.tree_map_with_path(fn, grads)
+
+
+def compressed_bytes_ratio(grads: Any, bases: dict[str, jax.Array]) -> float:
+    """Fraction of all-reduce bytes remaining after compression."""
+    total, kept = 0, 0
+    for path, g in jax.tree_util.tree_leaves_with_path(grads):
+        n = int(np.prod(g.shape))
+        total += n
+        v = bases.get(_path_key(path))
+        if v is None:
+            kept += n
+        else:
+            rows = n // g.shape[-1]
+            kept += rows * v.shape[1]
+    return kept / max(total, 1)
+
+
+def _path_key(path) -> str:
+    return "/".join(
+        str(p.key) if hasattr(p, "key") else str(p) for p in path
+    )
+
+
+def refresh_bases(
+    grads: Any, cfg: GradCompressConfig, seed: int = 0
+) -> dict[str, jax.Array]:
+    """Host-side DROP pass over every compressible gradient matrix."""
+    bases: dict[str, jax.Array] = {}
+    for i, (path, g) in enumerate(jax.tree_util.tree_leaves_with_path(grads)):
+        names = tuple(str(p.key) if hasattr(p, "key") else str(p) for p in path)
+        if not compressible(names, g):
+            continue
+        v = discover_basis(np.asarray(_as_matrix(g)), cfg, seed=seed + i)
+        if v is not None:
+            bases[_path_key(path)] = jnp.asarray(v)
+    return bases

@@ -1,0 +1,166 @@
+"""Trainer: the fault-tolerant training loop.
+
+Wires together: token pipeline -> jitted train_step -> checkpoint every N
+steps (atomic) -> failure injection/restart -> straggler monitoring ->
+optional DROP gradient-compression basis refresh. This is the loop
+examples/train_lm.py and the fault-tolerance tests drive.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.fault.faults import FailureInjector, NodeFailure, StragglerMonitor
+from repro.models.model import init_model
+from repro.sharding.specs import ShardCtx
+from repro.train.grad_compress import GradCompressConfig, refresh_bases
+from repro.train.optimizer import OptimizerConfig, init_optimizer
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    remat: str = "none"
+    seed: int = 0
+    failure_prob: float = 0.0  # failure injection for restart testing
+    grad_compress: GradCompressConfig | None = None
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int = 0
+    restarts: int = 0
+    losses: list = field(default_factory=list)
+    straggler_steps: list = field(default_factory=list)
+    ckpt_steps: list = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: OptimizerConfig,
+        tcfg: TrainerConfig,
+        ctx: ShardCtx | None = None,
+        log: Callable[[str], None] = print,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.ctx = ctx or ShardCtx(mesh=None)
+        self.log = log
+        self.pipeline = TokenPipeline(
+            TokenPipelineConfig(
+                vocab_size=cfg.vocab_size,
+                seq_len=None or self._seq_len(),
+                global_batch=self._batch(),
+                seed=tcfg.seed,
+            )
+        )
+        self.injector = FailureInjector(tcfg.failure_prob, seed=tcfg.seed)
+        self.monitor = StragglerMonitor()
+        self.report = TrainerReport()
+        self._bases: dict | None = None
+        self._step_fn = None
+
+    # small-model defaults; launchers override by building Trainer subclasses
+    def _seq_len(self) -> int:
+        return 128
+
+    def _batch(self) -> int:
+        return 8
+
+    def _build_step(self):
+        return jax.jit(
+            make_train_step(
+                self.cfg,
+                self.opt_cfg,
+                self.ctx,
+                remat=self.tcfg.remat,
+                microbatches=self.tcfg.microbatches,
+                compress_bases=self._bases,
+            )
+        )
+
+    def _init_state(self):
+        params = init_model(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        return params, init_optimizer(params)
+
+    def run(self) -> TrainerReport:
+        """Train with restart-on-failure until total_steps."""
+        tc = self.tcfg
+        while True:
+            try:
+                self._run_from_checkpoint()
+                return self.report
+            except NodeFailure as e:
+                self.report.restarts += 1
+                self.log(f"[fault] {e} -> restarting from last checkpoint")
+                if self.report.restarts > 50:
+                    raise
+
+    def _run_from_checkpoint(self):
+        tc = self.tcfg
+        params, opt_state = self._init_state()
+        start = 0
+        last = ckpt.latest_step(tc.ckpt_dir)
+        if last is not None:
+            (params, opt_state), start = ckpt.restore(
+                tc.ckpt_dir, (params, opt_state)
+            )
+            self.log(f"[ckpt] restored step {start}")
+        self._step_fn = self._build_step()
+
+        step = start
+        while step < tc.total_steps:
+            batch = {
+                k: jax.numpy.asarray(v) for k, v in self.pipeline.batch(step).items()
+            }
+            t0 = time.perf_counter()
+            self.injector.maybe_fail(step)
+            params, opt_state, metrics = self._step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.monitor.observe(step, dt):
+                self.report.straggler_steps.append(step)
+                self.log(f"[straggler] step {step} took {dt:.2f}s")
+            self.report.losses.append(loss)
+            self.report.steps_run += 1
+            step += 1
+
+            if tc.grad_compress and step % tc.grad_compress.refresh_every == 0:
+                self._refresh_compression(params, opt_state, batch)
+
+            if step % tc.ckpt_every == 0 or step == tc.total_steps:
+                ckpt.save(tc.ckpt_dir, step, (params, opt_state))
+                ckpt.prune(tc.ckpt_dir, keep=tc.ckpt_keep)
+                self.report.ckpt_steps.append(step)
+            if step % tc.log_every == 0:
+                self.log(f"step {step}: loss={loss:.4f} ({dt*1e3:.0f} ms)")
+
+        self._final = (params, opt_state)
+
+    def _refresh_compression(self, params, opt_state, batch):
+        """Host-side DROP pass over current gradients -> new bases."""
+        from repro.models.model import loss_fn
+
+        grads = jax.grad(
+            lambda p: loss_fn(p, batch, self.cfg, self.ctx, remat="none")[0]
+        )(params)
+        self._bases = refresh_bases(grads, self.tcfg.grad_compress)
+        self._step_fn = self._build_step()
+        self.log(f"[drop-compress] refreshed {len(self._bases)} bases")

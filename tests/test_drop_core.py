@@ -1,0 +1,95 @@
+"""Unit + behaviour tests for the DROP optimizer core."""
+
+import numpy as np
+import pytest
+
+from repro.core import drop, DropConfig
+from repro.core.cost import knn_cost, linear_cost, zero_cost
+from repro.core.tlb import exact_tlb
+from repro.data import ecg_like, sinusoid_mixture, white_noise
+
+
+@pytest.fixture(scope="module")
+def structured():
+    return sinusoid_mixture(1200, 96, rank=6, seed=0)
+
+
+def test_drop_finds_low_dim_basis_on_structured_data(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.95, seed=0), cost=zero_cost())
+    assert res.satisfied
+    # intrinsic rank is 6 (+noise): DROP should find a small basis, far below d
+    assert res.k <= 16
+    assert res.v.shape == (96, res.k)
+
+
+def test_drop_result_tlb_matches_exact(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.95, seed=0), cost=zero_cost())
+    truth = exact_tlb(x[:300], res.v)
+    assert abs(truth - res.tlb_estimate) < 0.03
+    assert truth >= 0.93  # near target, sampling tolerance
+
+
+def test_drop_transform_is_contractive(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.9, seed=1), cost=zero_cost())
+    xt = res.transform(x)
+    rng = np.random.default_rng(0)
+    i = rng.integers(0, x.shape[0], 200)
+    j = rng.integers(0, x.shape[0], 200)
+    d_hi = np.linalg.norm(x[i] - x[j], axis=1)
+    d_lo = np.linalg.norm(xt[i] - xt[j], axis=1)
+    assert np.all(d_lo <= d_hi + 1e-3)
+
+
+def test_drop_processes_less_data_than_full_svd(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.95, seed=0), cost=knn_cost(x.shape[0]))
+    # progressive sampling should terminate well before scanning all data
+    assert res.total_rows_processed < x.shape[0]
+
+
+def test_drop_white_noise_needs_near_full_dimension():
+    x, _ = white_noise(300, 48, seed=3)
+    res = drop(x, DropConfig(target_tlb=0.9, seed=0), cost=zero_cost())
+    # unstructured data has no low-dim TLB basis: k must stay near d
+    assert res.k > 24
+
+
+def test_drop_respects_tighter_target_with_larger_k(structured):
+    x, _ = structured
+    lo = drop(x, DropConfig(target_tlb=0.75, seed=0), cost=zero_cost())
+    hi = drop(x, DropConfig(target_tlb=0.99, seed=0), cost=zero_cost())
+    assert lo.k <= hi.k
+
+
+def test_drop_prefix_and_binary_agree(structured):
+    x, _ = structured
+    rb = drop(x, DropConfig(target_tlb=0.9, search="binary", seed=0), cost=zero_cost())
+    rp = drop(x, DropConfig(target_tlb=0.9, search="prefix", seed=0), cost=zero_cost())
+    assert abs(rb.k - rp.k) <= 3  # same decision up to pair-sampling noise
+
+
+def test_drop_full_svd_mode(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.9, svd="full", seed=0), cost=zero_cost())
+    assert res.satisfied
+
+
+def test_linear_cost_terminates_earlier_than_zero_cost(structured):
+    x, _ = structured
+    eager = drop(
+        x, DropConfig(target_tlb=0.9, seed=0), cost=linear_cost(x.shape[0], 1e-7)
+    )
+    patient = drop(x, DropConfig(target_tlb=0.9, seed=0), cost=zero_cost())
+    assert len(eager.iterations) <= len(patient.iterations)
+
+
+def test_iteration_records_are_consistent(structured):
+    x, _ = structured
+    res = drop(x, DropConfig(target_tlb=0.9, seed=0), cost=zero_cost())
+    sizes = [r.sample_size for r in res.iterations]
+    assert sizes == sorted(sizes)  # progressive schedule is nondecreasing
+    assert res.runtime_s == pytest.approx(sum(r.runtime_s for r in res.iterations))
+    assert all(r.pairs_used >= 0 for r in res.iterations)

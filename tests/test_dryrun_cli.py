@@ -1,0 +1,58 @@
+"""Dry-run CLI smoke: the launch/dryrun.py machinery (512 forced devices,
+production mesh construction, lower+compile, roofline JSON) end to end for
+one small cell, in a subprocess so the device-count flag stays contained."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = __file__.rsplit("/tests/", 1)[0]
+
+
+@pytest.fixture(scope="module")
+def cell_record(tmp_path_factory):
+    out = tmp_path_factory.mktemp("dryrun")
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "whisper_tiny", "--shape", "decode_32k",
+            "--mesh", "single", "--out", str(out), "--force",
+        ],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    path = out / "whisper_tiny__decode_32k__single.json"
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_cell_compiles_on_production_mesh(cell_record):
+    assert cell_record["status"] == "ok"
+    assert cell_record["mesh"] == "single"
+
+
+def test_roofline_terms_present_and_sane(cell_record):
+    r = cell_record["roofline"]
+    assert r["chips"] == 256
+    assert r["compute_s"] >= 0 and r["memory_s"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_ratio"] <= 20  # decode: small but positive
+
+
+def test_memory_analysis_recorded(cell_record):
+    assert "CompiledMemoryStats" in cell_record["memory_analysis"]
+
+
+def test_skip_rule_applied():
+    """long_500k on a full-attention arch must be recorded as a skip."""
+    from repro.configs.base import SHAPES, cell_is_runnable, get_config
+
+    ok, why = cell_is_runnable(get_config("qwen3_32b"), SHAPES["long_500k"])
+    assert not ok and "quadratic" in why
+    ok2, _ = cell_is_runnable(get_config("mamba2_2_7b"), SHAPES["long_500k"])
+    assert ok2

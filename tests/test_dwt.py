@@ -1,0 +1,48 @@
+"""Haar DWT baseline: isometry, contractivity, nesting, min-k behavior."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines.dwt import dwt_min_k, dwt_transform, haar_expansion
+from repro.baselines.svd_pca import pca_min_k
+from repro.data import ecg_like, sinusoid_mixture
+
+
+def test_haar_is_isometry_pow2():
+    x, _ = ecg_like(300, 128, seed=0)
+    e = haar_expansion(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(e, axis=1), np.linalg.norm(x, axis=1), rtol=1e-4
+    )
+
+
+def test_haar_isometry_with_padding():
+    x, _ = ecg_like(200, 100, seed=1)  # pads 100 -> 128
+    e = haar_expansion(x)
+    assert e.shape[1] == 128
+    np.testing.assert_allclose(
+        np.linalg.norm(e, axis=1), np.linalg.norm(x, axis=1), rtol=1e-4
+    )
+
+
+@given(st.integers(2, 40), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_haar_contractive_property(k, seed):
+    x = np.random.default_rng(seed).normal(size=(30, 33)).astype(np.float32)
+    t = dwt_transform(x, k)
+    i, j = 0, 29
+    assert np.linalg.norm(t[i] - t[j]) <= np.linalg.norm(x[i] - x[j]) + 1e-4
+
+
+def test_smooth_signals_compress_well():
+    """Coarse Haar coefficients capture smooth/periodic structure."""
+    x, _ = sinusoid_mixture(800, 256, rank=4, seed=2)
+    k = dwt_min_k(x, 0.90)
+    assert k < 256 // 2
+
+
+def test_pca_still_beats_dwt():
+    """The paper's conclusion extends to the wavelet baseline too."""
+    x, _ = ecg_like(800, 128, seed=3)
+    assert pca_min_k(x, 0.90) <= dwt_min_k(x, 0.90)

