@@ -23,6 +23,8 @@ MODULES = [
     "bench_fig9_scalability", # Fig 9: size-independence
     "bench_fig10_knn",        # Fig 10 + Tables 2/3/4: e2e k-NN
     "bench_fig12_dbscan",     # Fig 12: e2e DBSCAN
+    "bench_drop_serve",       # §5 reuse at the service layer: qps + cache
+
     "bench_mnist_like",       # §4.5: beyond time series
     "bench_kernels",          # kernel layer
     "bench_roofline",         # framework §Roofline table (from dry-run)

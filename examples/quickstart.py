@@ -70,6 +70,26 @@ def main() -> None:
               f"tlb={r.tlb_estimate:.4f}  r_i={r.runtime_s*1e3:6.1f} ms  "
               f"pairs={r.pairs_used}")
 
+    serve_demo(x[:2000], cfg)
+
+
+def serve_demo(x, cfg) -> None:
+    """Multi-query serving (paper §5 reuse): repeat workloads are served
+    from the basis cache after one cold fit — no re-fitting, just a sampled
+    TLB revalidation. Full CLI: python -m repro.launch.drop_serve"""
+    from repro.serve_drop import DropService
+
+    print("\nDropService: 4 submissions of the same workload")
+    svc = DropService()
+    cost = knn_cost(x.shape[0])  # C_m for the rows actually served
+    for _ in range(4):
+        svc.submit(x, cfg, cost)
+    for r in svc.run():
+        tag = "cache-hit" if r.cache_hit else "cold"
+        print(f"  q{r.query_id}  [{tag:9s}]  k={r.result.k:3d}  "
+              f"tlb={r.result.tlb_estimate:.4f}  wall={r.wall_s*1e3:7.1f} ms")
+    print(f"  stats: {svc.stats.as_dict()}")
+
 
 if __name__ == "__main__":
     main()

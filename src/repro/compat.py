@@ -1,0 +1,29 @@
+"""Cross-version jax API shims (the image bakes a 0.4.x jax).
+
+``shard_map`` was promoted from ``jax.experimental.shard_map`` to the
+``jax`` namespace (~0.5), its ``check_rep`` kwarg was renamed to
+``check_vma``, and partial-manual mode switched from ``auto`` (axes left
+automatic) to ``axis_names`` (axes made manual). The sharded code paths are
+written against the new API; this shim translates for the 0.4.x line.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if "axis_names" in kwargs:
+            manual = frozenset(kwargs.pop("axis_names"))
+            mesh = kwargs.get("mesh", args[1] if len(args) > 1 else None)
+            kwargs["auto"] = frozenset(mesh.axis_names) - manual
+        return _shard_map(*args, **kwargs)

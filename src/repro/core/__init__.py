@@ -1,7 +1,8 @@
 """DROP core: the paper primary contribution (progressive-sampling PCA
 optimizer with sampled TLB validation and cost-based termination)."""
 
-from repro.core.drop import drop  # noqa: F401
+from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache  # noqa: F401
+from repro.core.drop import DropRunner, drop  # noqa: F401
 from repro.core.types import (  # noqa: F401
     DEFAULT_SCHEDULE,
     DropConfig,

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import halko as halko_mod
 from repro.core import pca as pca_mod
+from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache
 from repro.core.tlb import TLBEstimator
 from repro.core.types import DropConfig
 
@@ -39,14 +40,38 @@ class BasisSearchResult:
 
 
 def fit_basis(
-    sample: np.ndarray, cap: int, cfg: DropConfig, key: jax.Array
+    sample: np.ndarray,
+    cap: int,
+    cfg: DropConfig,
+    key: jax.Array,
+    bucket: ShapeBucketCache | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Fit a rank-``cap`` PCA basis on the sample. Returns (mean, V (d, cap))."""
-    xs = jnp.asarray(sample)
-    if cfg.svd == "full":
-        mean, v, _ = pca_mod.pca_fit_svd(xs, k=cap)
+    """Fit a rank-``cap`` PCA basis on the sample. Returns (mean, V (d, cap)).
+
+    With a ``bucket``, the sample is zero-padded to its row bucket and
+    centered with a row mask: padded rows contribute nothing to the mean and
+    stay exactly zero, and zero rows never change the right singular vectors
+    (C'ᵀC' = CᵀC) — so bucketed fits are exact while the jitted SVD stages
+    see only bucket-quantized shapes.
+    """
+    n, d = sample.shape
+    if bucket is not None:
+        padded = bucket.bucket_rows(n)
+        xs = jnp.asarray(
+            np.concatenate(
+                [sample, np.zeros((padded - n, d), sample.dtype)], axis=0
+            )
+            if padded > n
+            else sample
+        )
+        mask = jnp.arange(xs.shape[0]) < n
+        mean, c = pca_mod.center_masked(xs, mask)
     else:
-        mean, c = pca_mod.center(xs)
+        mean, c = pca_mod.center(jnp.asarray(sample))
+    if cfg.svd == "full":
+        _, _, vt = jnp.linalg.svd(c, full_matrices=False)
+        v = vt.T[:, :cap]
+    else:
         v, _ = halko_mod.svd_halko(
             c,
             cap,
@@ -105,9 +130,16 @@ def compute_basis(
     cfg: DropConfig,
     key: jax.Array,
     rng: np.random.Generator,
+    bucket: ShapeBucketCache | None = None,
 ) -> BasisSearchResult:
     """COMPUTE-BASIS(X, X_i, B): fit on the sample, evaluate TLB on full-data
-    pairs, search for the smallest satisfying k (bounded by k_{i-1})."""
+    pairs, search for the smallest satisfying k (bounded by k_{i-1}).
+
+    Shape-dependent sizes (fit width, TLB pair batches) quantize through
+    ``bucket`` so jitted stages see a bounded, shareable set of shapes;
+    defaults to the process-wide ``DEFAULT_BUCKETS``.
+    """
+    bucket = bucket or DEFAULT_BUCKETS
     m_i, d = sample.shape
     hard_cap = min(d, m_i)
     cap = hard_cap
@@ -115,14 +147,19 @@ def compute_basis(
         # §3.4.3: prior satisfying basis of size d' < d bounds the Halko rank
         cap = min(cap, prev_k)
     cap = max(cap, 1)
-    # padded shape buckets (DESIGN.md §2): fit the basis at the next multiple
-    # of 32 so the jitted Halko/TLB kernels see a bounded set of shapes across
+    # padded shape buckets (DESIGN.md §2): fit the basis at the bucketed width
+    # so the jitted Halko/TLB kernels see a bounded set of shapes across
     # iterations (data-dependent k would otherwise force fresh XLA compiles
     # every iteration); the search below still uses the true cap
-    cap_pad = min(hard_cap, ((cap + 31) // 32) * 32)
-    mean, v = fit_basis(sample, max(cap_pad, cap), cfg, key)
+    cap_pad = bucket.bucket_rank(cap, hard_cap)
+    mean, v = fit_basis(sample, max(cap_pad, cap), cfg, key, bucket=bucket)
     est = TLBEstimator(
-        x, jnp.asarray(v), rng, confidence=cfg.confidence, use_kernels=cfg.use_kernels
+        x,
+        jnp.asarray(v),
+        rng,
+        confidence=cfg.confidence,
+        use_kernels=cfg.use_kernels,
+        bucket=bucket,
     )
     search = _binary_search if cfg.search == "binary" else _prefix_search
     k, tlb_mean, satisfied, pairs = search(est, cfg.target_tlb, cap, cfg)

@@ -1,0 +1,118 @@
+"""Shape-bucket quantization for jitted stages (DESIGN.md §2, extended).
+
+DROP's per-iteration shapes are data-dependent: the Halko rank cap shrinks as
+satisfying bases are found, and the TLB pair count doubles until the CI clears
+the target. Left raw, every new size forces a fresh XLA compile. The original
+``compute_basis`` padded the rank cap to the next multiple of 32 inline; this
+module promotes that trick into an explicit, shared ``ShapeBucketCache`` so
+
+* the Halko fit and the pairwise-TLB batches quantize through ONE policy,
+* a multi-query service can share one bucket set across tenants (the jit
+  cache is keyed by shape, so shared buckets mean shared compiles), and
+* the bucket population is observable (hit-rate telemetry for the service).
+
+Quantization is deterministic (pure rounding), so routing through a bucket
+cache never changes numerical results — padding rows are zeros that are
+sliced away, and rank padding only widens the fitted basis beyond the
+searched cap, exactly as the inline pad-to-32 always did.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def round_up(n: int, quantum: int) -> int:
+    """Smallest multiple of ``quantum`` that is >= n (n <= 0 maps to quantum)."""
+    n = max(int(n), 1)
+    q = max(int(quantum), 1)
+    return ((n + q - 1) // q) * q
+
+
+@dataclass
+class BucketStats:
+    """Per-family telemetry: how often a request landed in an existing bucket."""
+
+    hits: int = 0
+    misses: int = 0
+    sizes: set = field(default_factory=set)
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+
+class ShapeBucketCache:
+    """Quantizes data-dependent sizes into a bounded bucket set.
+
+    Families:
+      * ``rank``  — Halko/SVD fit width (the old inline pad-to-32 in
+        ``compute_basis``), clamped to the hard cap min(m_i, d).
+      * ``pairs`` — TLB pair-batch row counts; the estimator zero-pads each
+        incremental batch up to the bucket and slices the padding off.
+      * ``rows``  — PCA-fit sample rows; the fit zero-pads the sample and
+        uses masked centering, so tenants whose progressive schedules land
+        in the same bucket share one Halko executable.
+
+    A "hit" means the padded size was already in the family's bucket set, i.e.
+    the jitted stage will reuse an existing XLA executable instead of
+    compiling a new one.
+    """
+
+    def __init__(
+        self,
+        rank_quantum: int = 32,
+        pair_quantum: int = 128,
+        row_quantum: int = 64,
+    ) -> None:
+        self.rank_quantum = rank_quantum
+        self.pair_quantum = pair_quantum
+        self.row_quantum = row_quantum
+        self.stats: dict[str, BucketStats] = {
+            "rank": BucketStats(),
+            "pairs": BucketStats(),
+            "rows": BucketStats(),
+        }
+
+    def _record(self, family: str, size: int) -> int:
+        st = self.stats[family]
+        if size in st.sizes:
+            st.hits += 1
+        else:
+            st.misses += 1
+            st.sizes.add(size)
+        return size
+
+    def bucket_rank(self, cap: int, hard_cap: int) -> int:
+        """Padded fit width for a search cap of ``cap``: next multiple of
+        ``rank_quantum``, never beyond ``hard_cap`` = min(m_i, d)."""
+        padded = min(max(int(hard_cap), 1), round_up(cap, self.rank_quantum))
+        return self._record("rank", max(padded, max(int(cap), 1)))
+
+    def bucket_pairs(self, p: int) -> int:
+        """Padded row count for a TLB pair batch of ``p`` pairs."""
+        return self._record("pairs", round_up(p, self.pair_quantum))
+
+    def bucket_rows(self, n: int) -> int:
+        """Padded sample-row count for the PCA fit (masked centering keeps the
+        zero rows out of the mean; zero rows never change right singular
+        vectors, so the padded fit is exact for the real rows)."""
+        return self._record("rows", round_up(n, self.row_quantum))
+
+    def summary(self) -> str:
+        parts = []
+        for family, st in self.stats.items():
+            parts.append(
+                f"{family}: {len(st.sizes)} buckets, "
+                f"{st.hits}/{st.requests} hits ({st.hit_rate:.0%})"
+            )
+        return "; ".join(parts)
+
+
+# Shared default: single-query drop() and any service that does not bring its
+# own cache quantize through the same instance, so their jitted shapes align.
+DEFAULT_BUCKETS = ShapeBucketCache()

@@ -8,6 +8,12 @@
 The loop is host-driven (termination is data-dependent); all heavy per-
 iteration compute (centering, SVD-Halko, pairwise TLB) is jitted JAX, with
 Pallas kernel routing under ``cfg.use_kernels``.
+
+The loop body lives in ``DropRunner``, a resumable one-iteration-at-a-time
+state machine: ``drop()`` drives it to completion for the classic
+single-query API, and ``repro.serve_drop.DropService`` interleaves ``step()``
+calls across many in-flight queries so early-terminating queries free device
+time for the rest.
 """
 
 from __future__ import annotations
@@ -18,49 +24,90 @@ import numpy as np
 from repro.core import progress as progress_mod
 from repro.core import sampling as sampling_mod
 from repro.core.basis_search import compute_basis
+from repro.core.bucketing import ShapeBucketCache
 from repro.core.types import CostFn, DropConfig, DropResult, IterationRecord
 from repro.utils import Clock
 
 
-def drop(
-    x: np.ndarray,
-    cfg: DropConfig | None = None,
-    cost: CostFn | None = None,
-) -> DropResult:
-    """Run DROP on data matrix ``x`` (m, d). Returns the lowest-dimensional
-    TLB-preserving transformation found, per the objective R + C_m(k)."""
-    cfg = cfg or DropConfig()
-    if cost is None:
-        from repro.core.cost import knn_cost
+class DropRunner:
+    """Resumable DROP optimizer state for one query.
 
-        cost = knn_cost(x.shape[0])
-    x = np.ascontiguousarray(x, dtype=np.float32)
-    m, d = x.shape
+    Each ``step()`` runs exactly one Algorithm-2 iteration (sample → fit →
+    TLB-search → progress check) and returns True while more iterations
+    remain. Numerics are identical to a monolithic loop: all RNG streams are
+    owned by the runner, so interleaving steps of different runners cannot
+    perturb any individual query's trajectory.
 
-    rng = np.random.default_rng(cfg.seed)
-    pair_rng = np.random.default_rng(cfg.seed + 1)
-    key = jax.random.PRNGKey(cfg.seed)
+    ``warm_prev_k`` seeds the §3.4.3 rank bound from a previously fitted
+    basis (the serve-layer basis-reuse cache, paper §5), shrinking the first
+    Halko fit from min(m_1, d) down to the cached satisfying k. Unlike a
+    bound earned by this run's own satisfying iteration, the warm bound is
+    a hint: if the first iteration under it fails the TLB target (the
+    cached basis was stale for this data), the cap is dropped so later
+    iterations search the full rank again.
+    """
 
-    sizes = sampling_mod.schedule_sizes(m, cfg.schedule)
-    records: list[IterationRecord] = []
-    hard_points: np.ndarray | None = None
-    prev_k: int | None = None
-    best: dict | None = None
-    total_runtime = 0.0
-    clock = Clock()
+    def __init__(
+        self,
+        x: np.ndarray,
+        cfg: DropConfig | None = None,
+        cost: CostFn | None = None,
+        *,
+        warm_prev_k: int | None = None,
+        bucket: ShapeBucketCache | None = None,
+    ) -> None:
+        self.cfg = cfg or DropConfig()
+        if cost is None:
+            from repro.core.cost import knn_cost
 
-    for i, size in enumerate(sizes):
-        clock.restart()
+            cost = knn_cost(x.shape[0])
+        self.cost = cost
+        self.x = np.ascontiguousarray(x, dtype=np.float32)
+        self.bucket = bucket
+        m = self.x.shape[0]
+
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self._pair_rng = np.random.default_rng(self.cfg.seed + 1)
+        self._key = jax.random.PRNGKey(self.cfg.seed)
+
+        self.sizes = sampling_mod.schedule_sizes(m, self.cfg.schedule)
+        self.records: list[IterationRecord] = []
+        self._hard_points: np.ndarray | None = None
+        self.prev_k: int | None = warm_prev_k
+        self._warm_cap = warm_prev_k is not None
+        self._best: dict | None = None
+        self.total_runtime = 0.0
+        self.fit_calls = 0
+        self._i = 0
+        self.done = False
+        self._clock = Clock()
+
+    def step(self) -> bool:
+        """Run one iteration; returns True iff the query still has work."""
+        if self.done:
+            return False
+        i, size = self._i, self.sizes[self._i]
+        m = self.x.shape[0]
+
+        self._clock.restart()
         idx = sampling_mod.draw_sample(
-            m, size, rng, hard_points=hard_points, reuse_fraction=cfg.reuse_fraction
+            m,
+            size,
+            self._rng,
+            hard_points=self._hard_points,
+            reuse_fraction=self.cfg.reuse_fraction,
         )
-        key, subkey = jax.random.split(key)
-        res = compute_basis(x, x[idx], prev_k, cfg, subkey, pair_rng)
-        r_i = clock.elapsed()
-        total_runtime += r_i
+        self._key, subkey = jax.random.split(self._key)
+        res = compute_basis(
+            self.x, self.x[idx], self.prev_k, self.cfg, subkey, self._pair_rng,
+            bucket=self.bucket,
+        )
+        self.fit_calls += 1
+        r_i = self._clock.elapsed()
+        self.total_runtime += r_i
 
-        obj_i = total_runtime + cost(res.k)
-        records.append(
+        obj_i = self.total_runtime + self.cost(res.k)
+        self.records.append(
             IterationRecord(
                 i=i,
                 sample_size=size,
@@ -80,8 +127,8 @@ def drop(
             rank = (0, res.k, -res.tlb_mean)
         else:
             rank = (1, -res.tlb_mean, res.k)
-        if best is None or rank < best["rank"]:
-            best = {
+        if self._best is None or rank < self._best["rank"]:
+            self._best = {
                 "rank": rank,
                 "v": res.v_full[:, : res.k],
                 "mean": res.mean,
@@ -92,25 +139,49 @@ def drop(
 
         # importance sampling state for the next iteration (§3.3.2)
         pts, scores = res.estimator.point_scores(res.k)
-        hard_points = sampling_mod.hard_points_from_scores(
-            pts, scores, quantile=cfg.reuse_fraction
+        self._hard_points = sampling_mod.hard_points_from_scores(
+            pts, scores, quantile=self.cfg.reuse_fraction
         )
         if res.satisfied:
-            prev_k = res.k  # §3.4.3: shrink the Halko rank for later iterations
+            self.prev_k = res.k  # §3.4.3: shrink the Halko rank later on
+            self._warm_cap = False  # bound now earned by this run's own data
+        elif self._warm_cap:
+            # the warm-start cap was stale for this data: un-cap so the next
+            # iteration can search beyond the cached k
+            self.prev_k = None
+            self._warm_cap = False
 
         # CHECK-PROGRESS (§3.5): estimate next iteration, Eq. 2 stopping rule
-        if i + 1 < len(sizes) and progress_mod.should_terminate(
-            records, sizes[i + 1], cost, min_iterations=cfg.min_iterations
+        self._i += 1
+        if self._i >= len(self.sizes) or progress_mod.should_terminate(
+            self.records, self.sizes[self._i], self.cost,
+            min_iterations=self.cfg.min_iterations,
         ):
-            break
+            self.done = True
+        return not self.done
 
-    assert best is not None
-    return DropResult(
-        v=np.asarray(best["v"]),
-        mean=np.asarray(best["mean"]),
-        k=int(best["k"]),
-        tlb_estimate=float(best["tlb"]),
-        satisfied=bool(best["satisfied"]),
-        runtime_s=total_runtime,
-        iterations=records,
-    )
+    def result(self) -> DropResult:
+        """The best basis found so far (valid once at least one step ran)."""
+        assert self._best is not None, "result() before any step()"
+        return DropResult(
+            v=np.asarray(self._best["v"]),
+            mean=np.asarray(self._best["mean"]),
+            k=int(self._best["k"]),
+            tlb_estimate=float(self._best["tlb"]),
+            satisfied=bool(self._best["satisfied"]),
+            runtime_s=self.total_runtime,
+            iterations=self.records,
+        )
+
+
+def drop(
+    x: np.ndarray,
+    cfg: DropConfig | None = None,
+    cost: CostFn | None = None,
+) -> DropResult:
+    """Run DROP on data matrix ``x`` (m, d). Returns the lowest-dimensional
+    TLB-preserving transformation found, per the objective R + C_m(k)."""
+    runner = DropRunner(x, cfg, cost)
+    while runner.step():
+        pass
+    return runner.result()

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 from scipy import stats
 
+from repro.core.bucketing import ShapeBucketCache
+
 
 def sample_pairs(m: int, p: int, rng: np.random.Generator) -> np.ndarray:
     """Draw p index pairs (i, j), i != j, uniformly (with replacement across
@@ -83,11 +85,13 @@ class TLBEstimator:
         rng: np.random.Generator,
         confidence: float = 0.95,
         use_kernels: bool = False,
+        bucket: ShapeBucketCache | None = None,
     ) -> None:
         self.x = x
         self.v = v
         self.rng = rng
         self.confidence = confidence
+        self.bucket = bucket
         self.m = x.shape[0]
         self.num_pairs_total = self.m * (self.m - 1) // 2
         self._fn = _kernel_prefix_tlb if use_kernels else prefix_tlb_table
@@ -98,9 +102,19 @@ class TLBEstimator:
         if p <= self._pairs.shape[0]:
             return
         new = sample_pairs(self.m, p - self._pairs.shape[0], self.rng)
-        xi = jnp.asarray(self.x[new[:, 0]])
-        xj = jnp.asarray(self.x[new[:, 1]])
-        rows = np.asarray(self._fn(xi, xj, self.v))
+        xi = self.x[new[:, 0]]
+        xj = self.x[new[:, 1]]
+        if self.bucket is not None:
+            # zero-pad the batch to its shape bucket: jit sees a bounded set of
+            # pair-batch shapes across doublings/queries; padded rows (diff 0)
+            # are sliced off below before they can touch the estimate
+            padded = self.bucket.bucket_pairs(new.shape[0])
+            if padded > new.shape[0]:
+                pad = np.zeros((padded - new.shape[0], xi.shape[1]), xi.dtype)
+                xi = np.concatenate([xi, pad], axis=0)
+                xj = np.concatenate([xj, pad], axis=0)
+        rows = np.asarray(self._fn(jnp.asarray(xi), jnp.asarray(xj), self.v))
+        rows = rows[: new.shape[0]]
         self._pairs = np.concatenate([self._pairs, new], axis=0)
         self._table = np.concatenate([self._table, rows], axis=0)
 

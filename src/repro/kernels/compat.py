@@ -1,0 +1,12 @@
+"""Pallas API compatibility across jax versions.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (~0.5);
+the kernels are written against the new name and this shim keeps them
+importable on the 0.4.x line baked into the container image.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -97,7 +99,7 @@ def flash_decode_pallas(
             pltpu.VMEM((kv, g), jnp.float32),       # running denom
             pltpu.VMEM((kv, g, hd), jnp.float32),   # running numerator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _tlb_kernel(xi_ref, xj_ref, v_ref, o_ref, acc_ref, den_ref):
     diffs = (xi_ref[...] - xj_ref[...]).astype(jnp.float32)
@@ -81,7 +83,7 @@ def pairwise_tlb_pallas(
             pltpu.VMEM((bp, 1), jnp.float32),  # running sum of z^2 per pair
             pltpu.VMEM((bp, 1), jnp.float32),  # ||diff||^2 per pair
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -13,9 +13,11 @@ from __future__ import annotations
 import functools
 
 import jax
+
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.attention import decode_attention
 from repro.models.layers import apply_mrope, apply_rope, rms_norm
@@ -96,7 +98,7 @@ def flash_decode(
 
     ba = tuple(batch_axes)
     sa = tuple(seq_axes)
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=ctx.mesh,
         in_specs=(

@@ -1,0 +1,14 @@
+"""Multi-tenant DROP serving: batched queries, shared shape buckets, and a
+basis-reuse cache that amortizes fitting across repeat workloads (paper §5)."""
+
+from repro.serve_drop.cache import (  # noqa: F401
+    BasisCacheEntry,
+    BasisReuseCache,
+    dataset_fingerprint,
+)
+from repro.serve_drop.service import (  # noqa: F401
+    DropQuery,
+    DropService,
+    ServeResult,
+    ServiceStats,
+)

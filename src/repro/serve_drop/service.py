@@ -1,0 +1,269 @@
+"""DropService: batched multi-query DROP with basis reuse.
+
+The service accepts many DR queries (dataset + target TLB + downstream cost
+function) and drives them through the shared device:
+
+* **admission** — each query is fingerprinted and checked against the
+  ``BasisReuseCache``. An exact hit is revalidated with a sampled TLB
+  estimate on the live data (no fitting at all); a warm hit seeds the
+  §3.4.3 rank bound of a cold run; a miss runs cold.
+* **scheduling** — cold runs are ``DropRunner`` state machines; the
+  scheduler round-robins single iterations across up to ``max_inflight``
+  runners, so a query that terminates after two cheap iterations frees its
+  slot immediately instead of queueing behind a heavy tenant.
+* **shape sharing** — all runners and validators quantize through one
+  ``ShapeBucketCache``, so tenants with compatible shapes reuse each
+  other's XLA executables (the jit cache is keyed by shape).
+
+Per-query numerics are identical to sequential ``drop()`` with the same
+config: every runner owns its RNG streams, and interleaving never reorders
+any single query's draws.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache
+from repro.core.drop import DropRunner
+from repro.core.tlb import TLBEstimator
+from repro.core.types import CostFn, DropConfig, DropResult
+from repro.serve_drop.cache import (
+    BasisCacheEntry,
+    BasisReuseCache,
+    dataset_fingerprint,
+)
+
+
+@dataclass
+class DropQuery:
+    """One tenant request: reduce ``x`` to the smallest TLB-preserving basis."""
+
+    query_id: int
+    x: np.ndarray
+    cfg: DropConfig
+    cost: CostFn | None = None
+    fingerprint: str = ""  # computed once at submit()
+    t0: float | None = None  # pinned at first dequeue (includes deferral time)
+
+
+@dataclass
+class ServeResult:
+    query_id: int
+    result: DropResult
+    cache_hit: bool = False  # served straight from the basis cache
+    warm_started: bool = False  # cold run, but rank bound seeded from cache
+    wall_s: float = 0.0
+
+
+@dataclass
+class ServiceStats:
+    queries: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    warm_starts: int = 0
+    fit_calls: int = 0
+    iterations: int = 0
+    validation_pairs: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+@dataclass
+class _InFlight:
+    query: DropQuery
+    runner: DropRunner
+    fingerprint: str
+    warm_started: bool
+    t0: float  # queue-pinned at first dequeue (includes deferral time)
+
+
+class DropService:
+    """Multi-tenant DROP scheduler with an LRU basis-reuse cache."""
+
+    def __init__(
+        self,
+        *,
+        max_inflight: int = 4,
+        cache_entries: int = 16,
+        bucket: ShapeBucketCache | None = None,
+        enable_cache: bool = True,
+    ) -> None:
+        self.max_inflight = max(int(max_inflight), 1)
+        # share the process-wide buckets by default: plain drop() calls (e.g.
+        # the CLI's jit warmup) and the service then compile the same shapes
+        self.bucket = bucket or DEFAULT_BUCKETS
+        self.cache = BasisReuseCache(capacity=cache_entries)
+        self.enable_cache = enable_cache
+        self.stats = ServiceStats()
+        self._queue: deque[DropQuery] = deque()
+        self._inflight: deque[_InFlight] = deque()
+        self._results: dict[int, ServeResult] = {}
+        self._next_id = 0
+
+    # ------------------------------------------------------------- intake
+
+    def submit(
+        self,
+        x: np.ndarray,
+        cfg: DropConfig | None = None,
+        cost: CostFn | None = None,
+    ) -> int:
+        """Enqueue a query; returns its id (results keyed by it)."""
+        qid = self._next_id
+        self._next_id += 1
+        x = np.asarray(x)
+        self._queue.append(
+            DropQuery(query_id=qid, x=x, cfg=cfg or DropConfig(), cost=cost,
+                      fingerprint=dataset_fingerprint(x))
+        )
+        self.stats.queries += 1
+        return qid
+
+    # ------------------------------------------------------ cache serving
+
+    def _try_cache(self, q: DropQuery, fp: str, t0: float) -> bool:
+        """Serve ``q`` from the basis cache if a revalidated entry covers it."""
+        entry = self.cache.get_exact(fp, q.cfg.target_tlb)
+        if entry is None:
+            return False
+        tv = time.perf_counter()  # validation compute (excludes queue wait)
+        # revalidate on the live data: sampled TLB of the cached basis. No
+        # fit_basis call anywhere on this path — this is the §5 reuse win.
+        # Zero-pad the basis to its rank bucket so the jitted TLB table keeps
+        # the bucketed shapes of the fit path (zero columns never change the
+        # entries the validation reads); min(m, d) mirrors the fit path's
+        # hard cap so late-iteration fit shapes and hit shapes coincide.
+        v = entry.v
+        pad_w = self.bucket.bucket_rank(entry.k, min(q.x.shape))
+        if pad_w > v.shape[1]:
+            v = np.concatenate(
+                [v, np.zeros((v.shape[0], pad_w - v.shape[1]), v.dtype)], axis=1
+            )
+        est = TLBEstimator(
+            np.ascontiguousarray(q.x, dtype=np.float32),
+            jnp.asarray(v),
+            np.random.default_rng(q.cfg.seed + 1),
+            confidence=q.cfg.confidence,
+            use_kernels=q.cfg.use_kernels,
+            bucket=self.bucket,
+        )
+        e = est.estimate_at_k(
+            entry.k,
+            q.cfg.target_tlb,
+            initial_pairs=q.cfg.initial_pairs,
+            max_pairs=q.cfg.max_pairs,
+        )
+        self.stats.validation_pairs += e.pairs_used
+        if e.mean < q.cfg.target_tlb:
+            return False  # stale (near-repeat data drifted): fall through to cold
+        # runtime_s stays compute-only (matching the cold path's semantics);
+        # ServeResult.wall_s carries queue wait + deferral
+        result = DropResult(
+            v=entry.v,
+            mean=entry.mean,
+            k=entry.k,
+            tlb_estimate=e.mean,
+            satisfied=True,
+            runtime_s=time.perf_counter() - tv,
+            iterations=[],
+        )
+        self._results[q.query_id] = ServeResult(
+            query_id=q.query_id,
+            result=result,
+            cache_hit=True,
+            wall_s=time.perf_counter() - t0,
+        )
+        self.stats.cache_hits += 1
+        return True
+
+    # -------------------------------------------------------- scheduling
+
+    def _admit(self) -> None:
+        """Move queued queries into flight (or serve them from cache).
+
+        A query whose dataset is already being fitted in flight is deferred:
+        when the running tenant finishes, its basis lands in the cache and
+        the deferred repeat is served by validation instead of a duplicate
+        cold fit (the §5 reuse case under concurrency)."""
+        deferred: deque[DropQuery] = deque()
+        while self._queue and len(self._inflight) < self.max_inflight:
+            q = self._queue.popleft()
+            if q.t0 is None:
+                q.t0 = time.perf_counter()
+            t0, fp = q.t0, q.fingerprint
+            if self.enable_cache and any(
+                fl.fingerprint == fp for fl in self._inflight
+            ):
+                deferred.append(q)
+                continue
+            if self.enable_cache and self._try_cache(q, fp, t0):
+                continue
+            warm_k = (
+                self.cache.get_warm_k(fp, q.cfg.target_tlb)
+                if self.enable_cache
+                else None
+            )
+            # misses count failed lookups, so only when the cache is live;
+            # a warm start is counted as a warm start, not also a miss
+            if warm_k is not None:
+                self.stats.warm_starts += 1
+            elif self.enable_cache:
+                self.stats.cache_misses += 1
+            runner = DropRunner(
+                q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=self.bucket
+            )
+            self._inflight.append(
+                _InFlight(q, runner, fp, warm_started=warm_k is not None, t0=t0)
+            )
+        self._queue.extendleft(reversed(deferred))  # keep submission order
+
+    def _finish(self, fl: _InFlight) -> None:
+        res = fl.runner.result()
+        self.stats.fit_calls += fl.runner.fit_calls
+        self.stats.iterations += len(res.iterations)
+        self._results[fl.query.query_id] = ServeResult(
+            query_id=fl.query.query_id,
+            result=res,
+            warm_started=fl.warm_started,
+            wall_s=time.perf_counter() - fl.t0,
+        )
+        if res.satisfied and self.enable_cache:
+            self.cache.put(
+                fl.fingerprint,
+                BasisCacheEntry(
+                    v=res.v,
+                    mean=res.mean,
+                    k=res.k,
+                    target_tlb=fl.query.cfg.target_tlb,
+                    tlb_estimate=res.tlb_estimate,
+                    satisfied=True,
+                ),
+            )
+
+    def poll(self) -> bool:
+        """One scheduler tick: admit, then run one iteration of the oldest
+        in-flight runner (round-robin). Returns True while work remains."""
+        self._admit()
+        if not self._inflight:
+            return bool(self._queue)
+        fl = self._inflight.popleft()
+        if fl.runner.step():
+            self._inflight.append(fl)  # rotate: fair share of device time
+        else:
+            self._finish(fl)
+        return bool(self._inflight or self._queue)
+
+    def run(self) -> list[ServeResult]:
+        """Drain all submitted queries; results ordered by query id."""
+        while self.poll():
+            pass
+        out = [self._results[qid] for qid in sorted(self._results)]
+        self._results = {}
+        return out

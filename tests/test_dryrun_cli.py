@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 512-device mesh lower+compile: minutes
+
 ROOT = __file__.rsplit("/tests/", 1)[0]
 
 

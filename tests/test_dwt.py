@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.baselines.dwt import dwt_min_k, dwt_transform, haar_expansion
 from repro.baselines.svd_pca import pca_min_k

@@ -13,6 +13,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess multi-device compile: minutes
+
 PROG = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"

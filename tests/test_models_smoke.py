@@ -10,6 +10,8 @@ from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_smoke_config
 from repro.models.model import forward, init_model, loss_fn
 from repro.sharding.specs import ShardCtx
 
+pytestmark = pytest.mark.slow  # per-arch forward+grad: minutes, not CI-fast
+
 CTX = ShardCtx(mesh=None)
 B, S = 2, 32
 

@@ -23,10 +23,17 @@ def _scan_model(n_layers, b=16, d=64):
     return jax.jit(f).lower(jnp.ones((b, d))).compile()
 
 
+def _cost_flops(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # jax<=0.4.x: one dict per device
+        ca = ca[0]
+    return ca["flops"]
+
+
 def test_cost_analysis_misses_scan_trips():
     """The motivating defect: XLA's cost_analysis counts loop bodies once."""
-    f2 = _scan_model(2).cost_analysis()["flops"]
-    f8 = _scan_model(8).cost_analysis()["flops"]
+    f2 = _cost_flops(_scan_model(2))
+    f8 = _cost_flops(_scan_model(8))
     assert f2 == f8  # identical despite 4x the work
 
 

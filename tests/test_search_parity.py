@@ -1,0 +1,73 @@
+"""Parity of the two k-search modes (paper Alg. 4 binary vs TPU-native
+prefix): on the same fitted basis and the same pair stream, both must find
+the same smallest satisfying k, up to CI noise at the decision boundary."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.basis_search import _binary_search, _prefix_search, fit_basis
+from repro.core.tlb import TLBEstimator
+from repro.core.types import DropConfig
+from repro.data import sinusoid_mixture
+
+import jax.numpy as jnp
+
+TARGETS = (0.80, 0.90, 0.95, 0.99)
+CAPS = (8, 16, 48)
+
+
+def _searches(x, target, cap, seed):
+    """Run both searches on identical estimator state (same basis, and a
+    fixed pair seed so the CI noise is shared)."""
+    cfg = DropConfig(target_tlb=target, svd="full", seed=seed)
+    mean, v = fit_basis(x[:400], cap, cfg, jax.random.PRNGKey(seed))
+    out = {}
+    for name, search in (("binary", _binary_search), ("prefix", _prefix_search)):
+        est = TLBEstimator(
+            x, jnp.asarray(v), np.random.default_rng(seed), confidence=cfg.confidence
+        )
+        out[name] = search(est, target, cap, cfg)
+    return out
+
+
+@pytest.mark.parametrize("target", TARGETS)
+@pytest.mark.parametrize("cap", CAPS)
+def test_binary_and_prefix_agree_on_low_rank_data(target, cap):
+    x, _ = sinusoid_mixture(800, 64, rank=6, seed=0)
+    res = _searches(x, target, min(cap, 64), seed=0)
+    kb, mb, sb, _ = res["binary"]
+    kp, mp, sp, _ = res["prefix"]
+    assert sb == sp  # both reach the same satisfiability verdict
+    if sb:
+        assert abs(kb - kp) <= 1  # same smallest k up to boundary CI noise
+        assert mb >= target and mp >= target
+
+
+@pytest.mark.parametrize("seed", (1, 2, 3))
+def test_parity_across_seeds(seed):
+    x, _ = sinusoid_mixture(600, 48, rank=5, seed=seed)
+    res = _searches(x, 0.95, 32, seed=seed)
+    kb, _, sb, _ = res["binary"]
+    kp, _, sp, _ = res["prefix"]
+    assert sb and sp
+    assert abs(kb - kp) <= 1
+
+
+def test_unsatisfiable_cap_reported_by_both():
+    """A cap far below the intrinsic rank: both searches must say so rather
+    than return a bogus satisfying k."""
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(300, 40)).astype(np.float32)  # white noise: no low rank
+    res = _searches(x, 0.99, cap=2, seed=4)
+    _, _, sb, _ = res["binary"]
+    _, _, sp, _ = res["prefix"]
+    assert not sb and not sp
+
+
+def test_prefix_never_uses_more_pair_batches_than_binary():
+    """The prefix search decides from one fused table; its pair count can
+    never exceed the binary search's worst probe."""
+    x, _ = sinusoid_mixture(700, 64, rank=6, seed=5)
+    res = _searches(x, 0.95, 48, seed=5)
+    assert res["prefix"][3] <= res["binary"][3]

@@ -1,0 +1,111 @@
+"""TLBEstimator edge cases: coincident pairs, pair-budget clamping, k=0,
+and worst-first point scores (§3.3.2 / §3.4.2 corner behavior)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bucketing import ShapeBucketCache
+from repro.core.tlb import TLBEstimator, sample_pairs
+
+
+def _orthonormal(d: int, seed: int = 0) -> np.ndarray:
+    q = np.linalg.qr(np.random.default_rng(seed).normal(size=(d, d)))[0]
+    return q.astype(np.float32)
+
+
+def test_coincident_pairs_contribute_tlb_one():
+    """Duplicate rows give zero pair distance: the ratio is defined as 1
+    (any projection preserves a zero distance exactly)."""
+    d = 8
+    x = np.ones((20, d), dtype=np.float32)  # every pair is coincident
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(d)), np.random.default_rng(0))
+    tab = est.table(64)
+    np.testing.assert_allclose(tab, 1.0)
+    e = est.estimate_at_k(3, target=0.9)
+    assert e.mean == pytest.approx(1.0)
+
+
+def test_mixed_coincident_rows_stay_in_unit_interval():
+    d = 6
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(30, d)).astype(np.float32)
+    x[10:] = x[0]  # big block of duplicates → many coincident pairs
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(d, 1)), np.random.default_rng(2))
+    tab = est.table(200)
+    assert np.isfinite(tab).all()
+    assert tab.min() >= 0.0 and tab.max() <= 1.0 + 1e-5
+
+
+def test_pair_budget_clamped_to_population():
+    """max_pairs beyond m(m-1)/2 must clamp: the estimator never claims more
+    pairs than the population holds."""
+    d, m = 5, 6  # only 15 distinct pairs
+    x = np.random.default_rng(3).normal(size=(m, d)).astype(np.float32)
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(d, 3)), np.random.default_rng(4))
+    e = est.estimate_at_k(2, target=0.5, initial_pairs=100, max_pairs=10_000)
+    assert est.num_pairs_total == m * (m - 1) // 2
+    assert e.pairs_used <= est.num_pairs_total
+
+
+def test_estimate_at_k_zero_dimensions():
+    """k=0 projects everything to the origin: TLB 0, no pairs spent."""
+    x = np.random.default_rng(5).normal(size=(40, 7)).astype(np.float32)
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(7, 5)), np.random.default_rng(6))
+    e = est.estimate_at_k(0, target=0.9)
+    assert (e.mean, e.lo, e.hi, e.pairs_used) == (0.0, 0.0, 0.0, 0)
+
+
+def test_point_scores_are_per_point_minimum_and_worst_first():
+    """score(point) = min TLB over its evaluated pairs; sorting by score must
+    surface the worst-fit points first (they seed the next sample)."""
+    d, k = 10, 3
+    x = np.random.default_rng(7).normal(size=(60, d)).astype(np.float32)
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(d, 7)), np.random.default_rng(8))
+    est.table(300)
+    pts, scores = est.point_scores(k)
+    assert pts.size > 0 and pts.size == np.unique(pts).size
+
+    vals = est._table[:300, k - 1]
+    pairs = est._pairs[:300]
+    for p, s in zip(pts[:20], scores[:20]):
+        touching = vals[(pairs[:, 0] == p) | (pairs[:, 1] == p)]
+        assert s == pytest.approx(float(touching.min()), abs=1e-6)
+
+    # worst-first: the bottom-quantile cut used for importance sampling must
+    # select exactly the points at or below the score cutoff
+    from repro.core.sampling import hard_points_from_scores
+
+    hard = hard_points_from_scores(pts, scores, quantile=0.2)
+    cutoff = np.quantile(scores, 0.2)
+    np.testing.assert_array_equal(np.sort(hard), np.sort(pts[scores <= cutoff]))
+    assert scores[np.isin(pts, hard)].max() <= cutoff + 1e-12
+
+
+def test_point_scores_empty_before_any_pairs():
+    x = np.random.default_rng(9).normal(size=(10, 4)).astype(np.float32)
+    est = TLBEstimator(x, jnp.asarray(_orthonormal(4, 9)), np.random.default_rng(10))
+    pts, scores = est.point_scores(2)
+    assert pts.size == 0 and scores.size == 0
+    pts0, scores0 = est.point_scores(0)
+    assert pts0.size == 0 and scores0.size == 0
+
+
+def test_bucketed_extension_matches_unbucketed():
+    """Zero-padding pair batches to shape buckets must not change the table:
+    padding rows are sliced off before they reach any estimate."""
+    d = 12
+    x = np.random.default_rng(11).normal(size=(80, d)).astype(np.float32)
+    v = jnp.asarray(_orthonormal(d, 11))
+    plain = TLBEstimator(x, v, np.random.default_rng(12))
+    bucketed = TLBEstimator(
+        x, v, np.random.default_rng(12), bucket=ShapeBucketCache()
+    )
+    np.testing.assert_allclose(plain.table(100), bucketed.table(100), atol=1e-6)
+    np.testing.assert_allclose(plain.table(333), bucketed.table(333), atol=1e-6)
+
+
+def test_sample_pairs_within_range_small_m():
+    pairs = sample_pairs(2, 50, np.random.default_rng(13))
+    assert (pairs[:, 0] != pairs[:, 1]).all()
+    assert pairs.min() >= 0 and pairs.max() < 2
