@@ -1,47 +1,207 @@
-"""DropService throughput: repeat-workload traffic vs sequential cold drop().
+"""DropService throughput: repeat-workload reuse and multi-device scaling.
 
-The paper's §5 reuse claim, measured at the service layer: a pool of D
-distinct datasets is queried Q times (Q > D, so later submissions repeat).
-Sequential baseline pays a full cold DROP per query; the service pays DROP
-once per distinct dataset and a sampled-TLB validation per repeat. Expected:
->=1.5x on repeat-heavy traffic.
+Two claims, measured at the service layer:
+
+* **§5 reuse** — a pool of D distinct datasets is queried Q times (Q > D, so
+  later submissions repeat). Sequential baseline pays a full cold DROP per
+  query; the service pays DROP once per distinct dataset and a sampled-TLB
+  validation per repeat. Expected: >=1.5x on repeat-heavy traffic.
+* **multi-device scaling** — a multi-tenant cache-COLD workload
+  (heterogeneous tenants, each with its own shapes, zero reuse: every query
+  pays a full DROP fit) served by 1 vs N device workers. Following the
+  harness convention, jit compilation is excluded: each worker warms its
+  executables before the clock starts. Expected: >=1.5x at 2 devices.
+
+  Measurement note: the XLA *CPU* host platform serializes execution across
+  forced host devices inside one client (one execution pool per client), so
+  in-process placement cannot scale on CPU no matter the scheduler — the
+  bench therefore isolates each device in its own worker process (one XLA
+  client per device), which is also how a production CPU deployment shards.
+  On accelerator backends each device executes independently, so there the
+  in-process ``ShardedDropService`` threaded drain provides the overlap and
+  this bench's worker split simply mirrors its placement policy (tenant i ->
+  device i mod N).
+
+    python benchmarks/bench_drop_serve.py                # harness rows
+    python benchmarks/bench_drop_serve.py --devices 2    # scaling comparison
 """
 
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
 
-from benchmarks.harness import Row, timed
-from repro.core import DropConfig, drop
-from repro.core.cost import knn_cost
-from repro.data import sinusoid_mixture
-from repro.serve_drop import DropService
+# runnable both as `python -m benchmarks.bench_drop_serve` and as a script
+# without PYTHONPATH: the repo root provides `benchmarks.`, src/ provides
+# `repro.` (worker subprocesses still receive PYTHONPATH=src explicitly)
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 
-def _workload(n_queries: int, n_datasets: int, rows: int, dim: int):
-    pool = [
-        sinusoid_mixture(rows, dim, rank=5 + i, seed=i)[0]
-        for i in range(n_datasets)
+def _tenant_args(n_tenants: int) -> list[tuple[int, int, int, int]]:
+    """Heterogeneous tenants: every tenant has its own (rows, dim), so a cold
+    drain fits per-tenant shapes — the multi-tenant case placement spreads."""
+    return [
+        (800 + 200 * i, 48 + 16 * i, 4 + i, i)  # rows, dim, rank, seed
+        for i in range(n_tenants)
     ]
-    return [pool[i % n_datasets] for i in range(n_queries)]
 
 
-def _serve(datasets, cfg, cost) -> DropService:
-    svc = DropService()
-    for x in datasets:
-        svc.submit(x, cfg, cost)
-    svc.run()
-    return svc
+def _scale_worker_main(argv: list[str]) -> None:
+    """Device-worker entry: serve this worker's tenant shard through a
+    single-device service. Warm first, handshake READY/GO on stdio so the
+    parent's clock excludes startup and compilation."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale-worker", type=int, required=True)  # shard index
+    ap.add_argument("--of", type=int, required=True)  # worker count
+    ap.add_argument("--tenants", type=int, default=6)
+    args = ap.parse_args(argv)
+
+    # partition host cores across device workers (multi-worker legs only):
+    # each worker's XLA client otherwise spawns an nproc-wide compute pool
+    # and N workers x nproc threads thrash — a production shard sizes each
+    # replica to cores/replicas, so the bench does too
+    if args.of > 1 and hasattr(os, "sched_setaffinity"):
+        cores = sorted(os.sched_getaffinity(0))
+        mine_cores = {
+            c for i, c in enumerate(cores) if i % args.of == args.scale_worker
+        }
+        os.sched_setaffinity(0, mine_cores or set(cores))
+
+    from repro.core import DropConfig
+    from repro.core.cost import zero_cost
+    from repro.data import sinusoid_mixture
+    from repro.serve_drop import DropService
+
+    # tenant i -> worker i mod N: same round-robin the sharded scheduler's
+    # least-loaded admission produces for a uniform arrival order
+    mine = [
+        (i, spec)
+        for i, spec in enumerate(_tenant_args(args.tenants))
+        if i % args.of == args.scale_worker
+    ]
+    # min_iterations pins every tenant to the full progressive schedule:
+    # Eq. 2 termination is wall-clock-adaptive, so unpinned iteration counts
+    # (and with them per-query k and the shape set compiled during warmup)
+    # would vary run-to-run and across legs
+    datasets = [
+        (i, sinusoid_mixture(rows, dim, rank=rank, seed=seed)[0],
+         DropConfig(target_tlb=0.98, seed=seed, min_iterations=99))
+        for i, (rows, dim, rank, seed) in mine
+    ]
+
+    def drain():
+        svc = DropService(max_inflight=len(datasets), enable_cache=False)
+        qids = {svc.submit(x, cfg, zero_cost()): i for i, x, cfg in datasets}
+        return {qids[r.query_id]: r.result.k for r in svc.run()}
+
+    drain()  # warm: compiles land here, outside the parent's clock
+    print("READY", flush=True)
+    sys.stdin.readline()  # GO
+    # best-of-3 (harness convention): all workers keep draining concurrently,
+    # so contention stays realistic while container noise is filtered
+    wall, ks = float("inf"), {}
+    for _ in range(3):
+        t0 = time.perf_counter()
+        ks = drain()
+        wall = min(wall, time.perf_counter() - t0)
+    print(json.dumps({"shard": args.scale_worker, "wall_s": wall,
+                      "ks": {str(i): k for i, k in ks.items()}}), flush=True)
 
 
-def run(full: bool = False) -> list[Row]:
+def _run_scale_leg(workers: int, tenants: int) -> dict:
+    """One leg: ``workers`` device processes serve ``tenants`` concurrently.
+    Leg wall = GO -> last worker done (startup/compile excluded)."""
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    procs = [
+        subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__),
+             "--scale-worker", str(w), "--of", str(workers),
+             "--tenants", str(tenants)],
+            env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True,
+        )
+        for w in range(workers)
+    ]
+    for p in procs:  # all workers warm before any clock starts
+        assert p.stdout.readline().strip() == "READY"
+    for p in procs:
+        p.stdin.write("GO\n")
+        p.stdin.flush()
+    outs = [json.loads(p.stdout.readline()) for p in procs]
+    for p in procs:
+        p.wait()
+    # leg wall = the slowest worker's best round: the service is only as
+    # fast as its most loaded device
+    wall = max(o["wall_s"] for o in outs)
+    ks: dict[str, int] = {}
+    for o in outs:
+        ks.update(o["ks"])
+    return {
+        "devices": workers,
+        "wall_s": wall,
+        "qps": tenants / wall,
+        "ks": [ks[str(i)] for i in range(tenants)],
+    }
+
+
+def scaling_rows(max_devices: int = 2, tenants: int = 6) -> list:
+    """Cache-cold multi-tenant throughput at 1 vs ``max_devices`` devices."""
+    from benchmarks.harness import Row
+
+    legs = [_run_scale_leg(d, tenants) for d in (1, max_devices)]
+    base, multi = legs[0], legs[-1]
+    speedup = multi["qps"] / base["qps"]
+    if base["ks"] != multi["ks"]:  # placement must never change results
+        raise AssertionError(
+            f"per-query k diverged across legs: {base['ks']} vs {multi['ks']}"
+        )
+    rows = [
+        Row(
+            f"drop_serve/scale_cold_t{tenants}/d{leg['devices']}",
+            leg["wall_s"] * 1e6 / tenants,
+            f"qps={leg['qps']:.2f}",
+        )
+        for leg in legs
+    ]
+    rows[-1].derived += (
+        f";speedup={speedup:.2f}x vs 1 device (multi-tenant cache-cold: "
+        "every query pays a full fit; one XLA client per device)"
+    )
+    return rows
+
+
+def run(full: bool = False) -> list:
+    from benchmarks.harness import Row, timed
+    from repro.core import DropConfig, drop
+    from repro.core.cost import knn_cost
+    from repro.data import sinusoid_mixture
+    from repro.serve_drop import DropService
+
     rows_n = 4000 if full else 1200
     dim = 128 if full else 64
     n_queries = 16 if full else 8
     n_datasets = 2
     cfg = DropConfig(target_tlb=0.98, seed=0)
     cost = knn_cost(rows_n)
-    datasets = _workload(n_queries, n_datasets, rows_n, dim)
+    pool = [
+        sinusoid_mixture(rows_n, dim, rank=5 + i, seed=i)[0]
+        for i in range(n_datasets)
+    ]
+    datasets = [pool[i % n_datasets] for i in range(n_queries)]
+
+    def _serve():
+        svc = DropService()
+        for x in datasets:
+            svc.submit(x, cfg, cost)
+        svc.run()
+        return svc
 
     # warmup=1 runs each side once un-timed (harness convention: timing
     # excludes jit compilation), so the comparison isolates basis reuse —
@@ -49,7 +209,7 @@ def run(full: bool = False) -> list[Row]:
     t_seq, _ = timed(
         lambda: [drop(x, cfg, cost=cost) for x in datasets], warmup=1
     )
-    t_srv, svc = timed(lambda: _serve(datasets, cfg, cost), warmup=1)
+    t_srv, svc = timed(_serve, warmup=1)
 
     speedup = t_seq / t_srv
     out = [
@@ -66,9 +226,24 @@ def run(full: bool = False) -> list[Row]:
             "(paper §5: reuse amortizes fitting across repeat workloads)",
         ),
     ]
+    if full:
+        # subprocess legs: minutes of cold compile each, full mode only
+        out += scaling_rows()
     return out
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(row.csv())
+    if any(a == "--scale-worker" or a.startswith("--scale-worker=")
+           for a in sys.argv):
+        _scale_worker_main(sys.argv[1:])
+    elif any(a == "--devices" or a.startswith("--devices=")
+             for a in sys.argv):
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--devices", type=int, default=2)
+        ap.add_argument("--tenants", type=int, default=6)
+        args = ap.parse_args()
+        for row in scaling_rows(args.devices, args.tenants):
+            print(row.csv())
+    else:
+        for row in run():
+            print(row.csv())

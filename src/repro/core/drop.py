@@ -81,6 +81,19 @@ class DropRunner:
         self._i = 0
         self.done = False
         self._clock = Clock()
+        self.device = None  # mesh device this runner is pinned to (optional)
+
+    def place(self, device) -> None:
+        """Pin this runner's compute to ``device`` (serve-layer sharding).
+
+        Between steps the runner's state is host numpy except the PRNG key;
+        committing the key makes every jitted stage that consumes it (and,
+        by input-following, the arrays staged with it) execute on ``device``.
+        Calling place() again migrates the runner — work stealing moves
+        runners only between steps, so mid-iteration state never spans
+        devices."""
+        self._key = jax.device_put(self._key, device)
+        self.device = device
 
     def step(self) -> bool:
         """Run one iteration; returns True iff the query still has work."""

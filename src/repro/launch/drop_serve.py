@@ -1,25 +1,66 @@
 """DROP serving launcher CLI: batched multi-query DR with basis reuse.
 
     PYTHONPATH=src python -m repro.launch.drop_serve --queries 8
+    PYTHONPATH=src python -m repro.launch.drop_serve --devices 2 --async
 
 Generates a synthetic tenant workload (a pool of distinct datasets, with a
 configurable fraction of repeat submissions — the paper-§5 regime), drains it
-through ``DropService``, and reports queries/sec, cache behavior, and the
-shared shape-bucket population. ``--compare-sequential`` also times cold
-``drop()`` per query for a direct speedup figure.
+through ``DropService`` (or the sharded multi-device scheduler with
+``--devices N``, and the threaded ingest front-end with ``--async``), and
+reports queries/sec, cache behavior, per-device occupancy, and the shared
+shape-bucket population. ``--compare-sequential`` also times cold ``drop()``
+per query for a direct speedup figure.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
-import numpy as np
 
-from repro.core import DropConfig, drop
-from repro.core.cost import knn_cost
-from repro.data import sinusoid_mixture
-from repro.serve_drop import DropService
+def _requested_devices(argv: list[str]) -> int | None:
+    """Pre-argparse peek at --devices (both '--devices N' and
+    '--devices=N'); malformed values are left for argparse to report."""
+    for i, arg in enumerate(argv):
+        raw = None
+        if arg == "--devices" and i + 1 < len(argv):
+            raw = argv[i + 1]
+        elif arg.startswith("--devices="):
+            raw = arg.split("=", 1)[1]
+        if raw is not None:
+            try:
+                return int(raw)
+            except ValueError:
+                return None
+    return None
+
+
+def _force_host_devices_from_argv() -> None:
+    """--devices N needs the forced host platform BEFORE jax initializes
+    (same trick as launch/dryrun.py); on real multi-device hardware
+    XLA_FLAGS is already set and we leave it alone."""
+    n = _requested_devices(sys.argv)
+    if n is not None and n > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}"
+        )
+
+
+_force_host_devices_from_argv()
+
+import numpy as np  # noqa: E402
+
+from repro.core import DropConfig, drop  # noqa: E402
+from repro.core.cost import knn_cost  # noqa: E402
+from repro.data import sinusoid_mixture  # noqa: E402
+from repro.serve_drop import (  # noqa: E402
+    DropService,
+    IngestFrontend,
+    RetryLater,
+    ShardedDropService,
+)
 
 
 def build_workload(
@@ -34,6 +75,20 @@ def build_workload(
     return [pool[i % n_datasets] for i in range(n_queries)]
 
 
+def _submit_async(fe: IngestFrontend, datasets, cfg, cost) -> list[int]:
+    """Stream submissions through the bounded ingest queue, honoring
+    reject-with-retry-after backpressure."""
+    qids = []
+    for x in datasets:
+        while True:
+            try:
+                qids.append(fe.submit(x, cfg, cost))
+                break
+            except RetryLater as e:
+                time.sleep(e.retry_after_s)
+    return qids
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=8)
@@ -44,6 +99,16 @@ def main() -> None:
     ap.add_argument("--target", type=float, default=0.98)
     ap.add_argument("--max-inflight", type=int, default=4)
     ap.add_argument("--cache-entries", type=int, default=16)
+    ap.add_argument("--cache-ttl", type=int, default=None,
+                    help="basis-cache TTL in scheduler ticks (default: none)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="mesh devices for the sharded scheduler (>1 forces "
+                         "the host-platform device count on CPU)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="stream queries through the threaded ingest "
+                         "front-end instead of batch submit+run")
+    ap.add_argument("--queue-capacity", type=int, default=64,
+                    help="ingest backlog bound before reject-with-retry-after")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--compare-sequential", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -56,11 +121,23 @@ def main() -> None:
     cfg = DropConfig(target_tlb=args.target, seed=args.seed)
     cost = knn_cost(args.rows)
 
-    svc = DropService(
-        max_inflight=args.max_inflight,
-        cache_entries=args.cache_entries,
-        enable_cache=not args.no_cache,
-    )
+    if args.devices > 1:
+        svc = ShardedDropService(
+            devices=args.devices,
+            max_inflight=args.max_inflight,
+            cache_entries=args.cache_entries,
+            enable_cache=not args.no_cache,
+            cache_ttl=args.cache_ttl,
+        )
+        print(f"sharded scheduler over {len(svc.devices)} devices: "
+              f"{[str(d) for d in svc.devices]}")
+    else:
+        svc = DropService(
+            max_inflight=args.max_inflight,
+            cache_entries=args.cache_entries,
+            enable_cache=not args.no_cache,
+            cache_ttl=args.cache_ttl,
+        )
     # warm the jit caches with one cold drop() per distinct dataset so the
     # reported throughput measures serving, not XLA compilation (plain drop()
     # shares the shape buckets but never touches the service cache)
@@ -68,19 +145,34 @@ def main() -> None:
         drop(x, cfg, cost=cost)
 
     t0 = time.perf_counter()
-    for x in datasets:
-        svc.submit(x, cfg, cost)
-    results = svc.run()
+    if args.use_async:
+        with IngestFrontend(svc, queue_capacity=args.queue_capacity) as fe:
+            qids = _submit_async(fe, datasets, cfg, cost)
+            results = sorted(
+                (fe.result(q) for q in qids), key=lambda r: r.query_id
+            )
+    else:
+        for x in datasets:
+            svc.submit(x, cfg, cost)
+        results = svc.run()
     dt = time.perf_counter() - t0
 
     qps = args.queries / dt
     hits = sum(r.cache_hit for r in results)
+    mode = "async ingest" if args.use_async else "batch"
     print(f"served {args.queries} queries in {dt*1e3:.0f} ms  "
-          f"({qps:.2f} queries/sec)")
+          f"({qps:.2f} queries/sec, {mode})")
     print(f"cache: {hits}/{args.queries} hits, "
           f"{svc.stats.warm_starts} warm starts, "
           f"{svc.stats.fit_calls} basis fits, "
-          f"{len(svc.cache)} entries resident")
+          f"{len(svc.cache)} entries resident, "
+          f"{svc.stats.rejected} backpressure rejections")
+    if svc.stats.device_iterations:
+        occ = ", ".join(
+            f"{dev}={n}" for dev, n in sorted(svc.stats.device_iterations.items())
+        )
+        print(f"occupancy (iterations/device): {occ}; "
+              f"steals={svc.stats.steals}")
     print(f"buckets: {svc.bucket.summary()}")
     for r in results:
         tag = "HIT " if r.cache_hit else ("WARM" if r.warm_started else "COLD")

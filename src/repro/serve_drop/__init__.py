@@ -1,10 +1,18 @@
-"""Multi-tenant DROP serving: batched queries, shared shape buckets, and a
-basis-reuse cache that amortizes fitting across repeat workloads (paper §5)."""
+"""Multi-tenant DROP serving: batched queries, shared shape buckets, a
+basis-reuse cache that amortizes fitting across repeat workloads (paper §5),
+a sharded multi-device scheduler, and an async ingest front-end.
+
+See README.md in this package for the scheduler state machine and the
+cache hierarchy."""
 
 from repro.serve_drop.cache import (  # noqa: F401
     BasisCacheEntry,
     BasisReuseCache,
     dataset_fingerprint,
+)
+from repro.serve_drop.ingest import (  # noqa: F401
+    IngestFrontend,
+    RetryLater,
 )
 from repro.serve_drop.service import (  # noqa: F401
     DropQuery,
@@ -12,3 +20,4 @@ from repro.serve_drop.service import (  # noqa: F401
     ServeResult,
     ServiceStats,
 )
+from repro.serve_drop.sharded import ShardedDropService  # noqa: F401

@@ -21,6 +21,18 @@ Entries are keyed by (dataset fingerprint, quantized TLB target):
 The fingerprint is a content hash over the array's shape/dtype and a strided
 row subsample — O(sqrt) of the data, collision-safe in practice for the
 service's trust domain, and cheap enough to run per query.
+
+Staleness under drift: the exact-hit revalidation samples pairs with a
+seed pinned by the query config, so identical resubmissions validate on
+identical pairs forever — drift concentrated in never-sampled pairs is
+invisible to it. ``ttl_ticks`` bounds that blind spot: an entry older than
+the TTL (age measured in scheduler ticks, advanced by the service once per
+ADMITTED query, so a TTL counts serving decisions — independent of
+drain-thread count and of idle polling) is no longer served from
+``get_exact`` even when the fingerprint matches, forcing a full refit whose
+result re-populates the entry with a fresh basis AND a fresh age. Expired
+entries still seed warm starts — a stale warm rank bound is
+self-correcting in ``DropRunner``.
 """
 
 from __future__ import annotations
@@ -62,15 +74,23 @@ class BasisCacheEntry:
     target_tlb: float
     tlb_estimate: float
     satisfied: bool
+    born_tick: int = 0  # stamped by put(); age = cache clock - born_tick
 
 
 class BasisReuseCache:
-    """Bounded LRU over fitted bases, with exact and warm-start lookups."""
+    """Bounded LRU over fitted bases, with exact and warm-start lookups.
 
-    def __init__(self, capacity: int = 16) -> None:
+    ``ttl_ticks`` (None = never expire) caps how long an entry may serve
+    exact hits: past the TTL the entry is invisible to ``get_exact`` — the
+    query refits cold and ``put`` re-inserts it with a fresh age."""
+
+    def __init__(self, capacity: int = 16, ttl_ticks: int | None = None) -> None:
         self.capacity = max(int(capacity), 1)
+        self.ttl_ticks = ttl_ticks
         self._entries: OrderedDict[tuple[str, int], BasisCacheEntry] = OrderedDict()
         self.evictions = 0
+        self.expired_hits = 0
+        self._now = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -78,17 +98,35 @@ class BasisReuseCache:
     def keys(self) -> list[tuple[str, int]]:
         return list(self._entries.keys())
 
+    def tick(self) -> int:
+        """Advance the scheduler clock (one admitted query = one tick)."""
+        self._now += 1
+        return self._now
+
+    def _expired(self, entry: BasisCacheEntry) -> bool:
+        return (
+            self.ttl_ticks is not None
+            and self._now - entry.born_tick > self.ttl_ticks
+        )
+
     def get_exact(self, fp: str, target: float) -> BasisCacheEntry | None:
         """A satisfying entry for this dataset fitted at a target >= ours
         (checked loosest-first is unnecessary: any such basis, revalidated,
-        serves the request). Refreshes LRU recency."""
-        candidates = [
-            key
-            for key in self._entries
-            if key[0] == fp
-            and key[1] >= quantize_target(target)
-            and self._entries[key].satisfied
-        ]
+        serves the request). Refreshes LRU recency. Entries past the TTL are
+        skipped (counted in ``expired_hits``): the caller falls through to a
+        cold refit, which re-inserts a fresh entry."""
+        candidates = []
+        for key, entry in self._entries.items():
+            if not (
+                key[0] == fp
+                and key[1] >= quantize_target(target)
+                and entry.satisfied
+            ):
+                continue
+            if self._expired(entry):
+                self.expired_hits += 1
+            else:
+                candidates.append(key)
         if not candidates:
             return None
         # prefer the smallest satisfying basis among eligible targets
@@ -99,7 +137,9 @@ class BasisReuseCache:
     def get_warm_k(self, fp: str, target: float) -> int | None:
         """Rank bound for a cold run on known data: the smallest cached
         satisfying k whose fit target was >= the request's (a basis fitted at
-        a looser target cannot bound a tighter search)."""
+        a looser target cannot bound a tighter search). Expired entries still
+        qualify — a stale bound is a hint the runner drops after one failed
+        iteration, so it cannot poison the refit."""
         ks = [
             e.k
             for (efp, tq), e in self._entries.items()
@@ -109,6 +149,7 @@ class BasisReuseCache:
 
     def put(self, fp: str, entry: BasisCacheEntry) -> None:
         key = (fp, quantize_target(entry.target_tlb))
+        entry.born_tick = self._now  # (re)insertion restarts the TTL clock
         if key in self._entries:
             self._entries.move_to_end(key)
         self._entries[key] = entry

@@ -1,0 +1,195 @@
+"""Async ingest front-end: accept queries while the scheduler drains.
+
+``DropService.run()`` is batch-shaped — submit everything, then drain. A
+serving deployment instead sees an open stream of tenant queries, so this
+module adds the thread/condition front-end the ROADMAP asks for:
+
+* **drain threads** — ``start()`` spawns one drain thread per mesh device
+  (``service.drain_width``: 1 for the single-host service, device count for
+  the sharded one); each repeatedly executes the service's lock-protected
+  scheduler primitive, sleeping on a condition while idle.
+* **backpressure** — the service backlog (queued + in-flight) is bounded by
+  ``queue_capacity``; a submit over the bound raises ``RetryLater`` carrying
+  a ``retry_after_s`` hint estimated from recent query service times
+  (reject-with-retry-after, never block-and-deadlock).
+* **completion** — ``result(qid)`` blocks (with optional timeout) until the
+  scheduler finishes that query; the service's ``on_result`` hook wakes
+  waiters, so there is no polling of the results dict.
+
+The frontend owns no scheduler state of its own: every admission, cache,
+and placement decision stays in the service, so the sync and async paths
+cannot diverge.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.types import CostFn, DropConfig
+from repro.serve_drop.service import DropService, ServeResult
+
+
+class RetryLater(RuntimeError):
+    """Backpressure rejection: the ingest queue is full. ``retry_after_s``
+    estimates when capacity should free up."""
+
+    def __init__(self, retry_after_s: float, backlog: int) -> None:
+        super().__init__(
+            f"ingest queue full ({backlog} queries pending); "
+            f"retry after {retry_after_s:.3f}s"
+        )
+        self.retry_after_s = retry_after_s
+        self.backlog = backlog
+
+
+class IngestFrontend:
+    """Thread-safe streaming front-end over a ``DropService``.
+
+    Usage::
+
+        with IngestFrontend(ShardedDropService(devices=4)) as fe:
+            qid = fe.submit(x, cfg)          # may raise RetryLater
+            res = fe.result(qid, timeout=30)
+    """
+
+    def __init__(
+        self,
+        service: DropService,
+        *,
+        queue_capacity: int = 64,
+    ) -> None:
+        self.service = service
+        self.queue_capacity = max(int(queue_capacity), 1)
+        self._wake = threading.Condition()  # drain threads sleep here
+        self._done = threading.Condition()  # result() waiters sleep here
+        self._stop = threading.Event()  # drain threads exit on this
+        self._closing = threading.Event()  # submits reject on this first
+        self._threads: list[threading.Thread] = []
+        self._recent_walls: deque[float] = deque(maxlen=32)
+        service.on_result = self._on_result
+
+    # ------------------------------------------------------------ lifecycle
+
+    @property
+    def drain_width(self) -> int:
+        """One drain thread per device; the base service has one device."""
+        return len(getattr(self.service, "devices", [None]))
+
+    def start(self) -> "IngestFrontend":
+        if self._threads:
+            return self
+        self._stop.clear()
+        self._closing.clear()
+        self._threads = [
+            threading.Thread(
+                target=self._drain, name=f"drop-ingest-{i}", daemon=True
+            )
+            for i in range(self.drain_width)
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the drain threads; ``drain=True`` finishes accepted work
+        first. New submits are rejected as soon as close() begins, and any
+        straggler that raced past the closing check is drained synchronously
+        at the end — an accepted query is never left without a scheduler."""
+        self._closing.set()  # reject new submits before waiting on backlog
+        if drain and self._threads:
+            while self.service.backlog():
+                time.sleep(0.002)
+        self._stop.set()
+        with self._wake:
+            self._wake.notify_all()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+        if drain:
+            while self.service.poll():  # straggler sweep (see docstring)
+                pass
+
+    def __enter__(self) -> "IngestFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -------------------------------------------------------------- intake
+
+    def submit(
+        self,
+        x: np.ndarray,
+        cfg: DropConfig | None = None,
+        cost: CostFn | None = None,
+    ) -> int:
+        """Enqueue a query from any thread. Raises ``RetryLater`` when the
+        bounded queue is full (backpressure) or the frontend is closed.
+        The capacity check is atomic with the enqueue (``try_submit``), so
+        concurrent submitters can never jointly overshoot the bound."""
+        if self._closing.is_set() or self._stop.is_set():
+            backlog = self.service.backlog()
+            raise RetryLater(self._retry_after(backlog), backlog)
+        qid = self.service.try_submit(
+            x, cfg, cost, max_backlog=self.queue_capacity
+        )
+        if qid is None:
+            backlog = self.service.backlog()
+            raise RetryLater(self._retry_after(backlog), backlog)
+        with self._wake:
+            self._wake.notify_all()
+        return qid
+
+    def _retry_after(self, backlog: int) -> float:
+        """Expected time for one slot to free: backlog / observed service
+        rate, floored so clients never busy-spin."""
+        if self._recent_walls:
+            per_query = sum(self._recent_walls) / len(self._recent_walls)
+        else:
+            per_query = 0.05
+        width = max(self.drain_width, 1)
+        return max(0.005, per_query * max(backlog, 1) / width / 4)
+
+    # ------------------------------------------------------------- results
+
+    def result(self, qid: int, timeout: float | None = None) -> ServeResult:
+        """Block until query ``qid`` finishes; raises TimeoutError."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._done:
+            while True:
+                res = self.service.take_result(qid)
+                if res is not None:
+                    self._recent_walls.append(res.wall_s)
+                    return res
+                remaining = (
+                    None if deadline is None else deadline - time.perf_counter()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"query {qid} still pending")
+                # remaining=None waits until _on_result notifies — the hook
+                # is serialized behind _done, so no wakeup can be lost
+                self._done.wait(timeout=remaining)
+
+    def _on_result(self, qid: int) -> None:
+        with self._done:
+            self._done.notify_all()
+
+    # --------------------------------------------------------------- drain
+
+    def _drain(self) -> None:
+        while not self._stop.is_set():
+            stepped, more = self.service._poll_once()
+            if stepped:
+                continue
+            if more:
+                # placeable work exists but every runner is mid-step on
+                # another drain thread — yield rather than spin
+                time.sleep(0.0005)
+                continue
+            with self._wake:
+                if not self._stop.is_set() and not self.service.backlog():
+                    self._wake.wait(timeout=0.05)

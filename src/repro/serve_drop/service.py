@@ -18,13 +18,26 @@ function) and drives them through the shared device:
 Per-query numerics are identical to sequential ``drop()`` with the same
 config: every runner owns its RNG streams, and interleaving never reorders
 any single query's draws.
+
+Thread-safety: ``submit``, ``poll``, and ``take_result`` may be called from
+different threads — one scheduler lock guards the queue, flight, cache, and
+stats, while every unit of device compute (a runner iteration OR a cache-hit
+revalidation) runs outside the lock, so ingest threads are never blocked
+behind device compute. The ``on_result`` hook fires with no scheduler lock
+held (waiters may re-enter ``take_result`` freely). A runner iteration that
+raises is contained: the query finishes with ``ServeResult.error`` set and
+the scheduler keeps draining the rest. ``ShardedDropService`` builds on
+this by running one drain thread per mesh device, and ``serve_drop.ingest``
+layers the bounded-queue async front-end on top.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,6 +72,7 @@ class ServeResult:
     cache_hit: bool = False  # served straight from the basis cache
     warm_started: bool = False  # cold run, but rank bound seeded from cache
     wall_s: float = 0.0
+    error: str | None = None  # set when the query's runner raised mid-flight
 
 
 @dataclass
@@ -70,18 +84,38 @@ class ServiceStats:
     fit_calls: int = 0
     iterations: int = 0
     validation_pairs: int = 0
+    failures: int = 0  # queries finished with ServeResult.error set
+    rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
+    steals: int = 0  # runners migrated to an idle device between rounds
+    # per-device occupancy: device label -> iterations stepped there; the
+    # single-host service books everything under "default"
+    device_iterations: dict = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dict(self.__dict__)
 
 
-@dataclass
+@dataclass(eq=False)  # identity semantics: scheduler queues remove by object
 class _InFlight:
     query: DropQuery
     runner: DropRunner
     fingerprint: str
     warm_started: bool
     t0: float  # queue-pinned at first dequeue (includes deferral time)
+    device: object = None  # mesh device the runner is placed on (sharded)
+
+
+@dataclass(eq=False)
+class _Validation:
+    """A pending cache-hit revalidation: device compute, so it is scheduled
+    like a runner iteration (outside the lock) instead of inside admission.
+    Its fingerprint stays visible to the dedup check while it runs."""
+
+    query: DropQuery
+    entry: BasisCacheEntry
+    fingerprint: str
+    t0: float
+    device: object = None  # mesh device to validate on (sharded)
 
 
 class DropService:
@@ -94,18 +128,30 @@ class DropService:
         cache_entries: int = 16,
         bucket: ShapeBucketCache | None = None,
         enable_cache: bool = True,
+        cache_ttl: int | None = None,
     ) -> None:
         self.max_inflight = max(int(max_inflight), 1)
         # share the process-wide buckets by default: plain drop() calls (e.g.
         # the CLI's jit warmup) and the service then compile the same shapes
         self.bucket = bucket or DEFAULT_BUCKETS
-        self.cache = BasisReuseCache(capacity=cache_entries)
+        self.cache = BasisReuseCache(capacity=cache_entries, ttl_ticks=cache_ttl)
         self.enable_cache = enable_cache
         self.stats = ServiceStats()
         self._queue: deque[DropQuery] = deque()
         self._inflight: deque[_InFlight] = deque()
+        self._validations: deque[_Validation] = deque()
         self._results: dict[int, ServeResult] = {}
         self._next_id = 0
+        # one scheduler lock guards queue/flight/cache/results/stats; device
+        # compute (steps AND revalidations) runs outside it so submit()
+        # never waits behind the device
+        self._lock = threading.RLock()
+        # work currently executing outside the lock: counts toward
+        # max_inflight and keeps its fingerprint visible to admission dedup
+        self._stepping_now: list = []
+        # ingest hook: called with each finished query id, with NO scheduler
+        # lock held (a waiter may re-enter take_result from the callback)
+        self.on_result: Callable[[int], None] | None = None
 
     # ------------------------------------------------------------- intake
 
@@ -115,33 +161,79 @@ class DropService:
         cfg: DropConfig | None = None,
         cost: CostFn | None = None,
     ) -> int:
-        """Enqueue a query; returns its id (results keyed by it)."""
-        qid = self._next_id
-        self._next_id += 1
-        x = np.asarray(x)
-        self._queue.append(
-            DropQuery(query_id=qid, x=x, cfg=cfg or DropConfig(), cost=cost,
-                      fingerprint=dataset_fingerprint(x))
-        )
-        self.stats.queries += 1
+        """Enqueue a query; returns its id (results keyed by it).
+
+        Thread-safe: the fingerprint is hashed outside the scheduler lock, so
+        concurrent submitters only serialize on the queue append."""
+        qid = self.try_submit(x, cfg, cost)
+        assert qid is not None  # unbounded submit never rejects
         return qid
+
+    def try_submit(
+        self,
+        x: np.ndarray,
+        cfg: DropConfig | None = None,
+        cost: CostFn | None = None,
+        *,
+        max_backlog: int | None = None,
+    ) -> int | None:
+        """Enqueue unless the backlog is at ``max_backlog``; returns the
+        query id or None on rejection. The bound check and the append are
+        one critical section, so concurrent submitters cannot jointly
+        overshoot the bound (ingest backpressure relies on this).
+
+        The O(m*d) float32/contiguity conversion happens HERE, on the
+        submitter's thread outside the scheduler lock — the runner and the
+        validation path then take zero-copy views, so admission under the
+        lock never copies a tenant's dataset."""
+        x = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
+        fp = dataset_fingerprint(x)
+        with self._lock:
+            if (
+                max_backlog is not None
+                and len(self._queue) + self._inflight_count() >= max_backlog
+            ):
+                self.stats.rejected += 1
+                return None
+            qid = self._next_id
+            self._next_id += 1
+            self._queue.append(
+                DropQuery(query_id=qid, x=x, cfg=cfg or DropConfig(), cost=cost,
+                          fingerprint=fp)
+            )
+            self.stats.queries += 1
+        return qid
+
+    def backlog(self) -> int:
+        """Queued + in-flight + mid-step queries (ingest backpressure gauge)."""
+        with self._lock:
+            return len(self._queue) + self._inflight_count()
+
+    def take_result(self, qid: int) -> ServeResult | None:
+        """Pop one finished result by query id (None while still pending)."""
+        with self._lock:
+            return self._results.pop(qid, None)
 
     # ------------------------------------------------------ cache serving
 
-    def _try_cache(self, q: DropQuery, fp: str, t0: float) -> bool:
-        """Serve ``q`` from the basis cache if a revalidated entry covers it."""
-        entry = self.cache.get_exact(fp, q.cfg.target_tlb)
-        if entry is None:
-            return False
+    def _validation_bucket(self, val: _Validation) -> ShapeBucketCache:
+        """Bucket cache for a validation's shapes (the sharded subclass
+        returns the device class's cache, matching the fits on that class)."""
+        return self.bucket
+
+    def _validate(self, val: _Validation) -> tuple[bool, DropResult | None]:
+        """Revalidate a cached basis on the live data: sampled TLB, no
+        fit_basis call anywhere — this is the §5 reuse win. Device compute:
+        runs OUTSIDE the scheduler lock, like a runner iteration."""
+        q, entry = val.query, val.entry
+        bucket = self._validation_bucket(val)
         tv = time.perf_counter()  # validation compute (excludes queue wait)
-        # revalidate on the live data: sampled TLB of the cached basis. No
-        # fit_basis call anywhere on this path — this is the §5 reuse win.
         # Zero-pad the basis to its rank bucket so the jitted TLB table keeps
         # the bucketed shapes of the fit path (zero columns never change the
         # entries the validation reads); min(m, d) mirrors the fit path's
         # hard cap so late-iteration fit shapes and hit shapes coincide.
         v = entry.v
-        pad_w = self.bucket.bucket_rank(entry.k, min(q.x.shape))
+        pad_w = bucket.bucket_rank(entry.k, min(q.x.shape))
         if pad_w > v.shape[1]:
             v = np.concatenate(
                 [v, np.zeros((v.shape[0], pad_w - v.shape[1]), v.dtype)], axis=1
@@ -152,7 +244,7 @@ class DropService:
             np.random.default_rng(q.cfg.seed + 1),
             confidence=q.cfg.confidence,
             use_kernels=q.cfg.use_kernels,
-            bucket=self.bucket,
+            bucket=bucket,
         )
         e = est.estimate_at_k(
             entry.k,
@@ -160,12 +252,13 @@ class DropService:
             initial_pairs=q.cfg.initial_pairs,
             max_pairs=q.cfg.max_pairs,
         )
-        self.stats.validation_pairs += e.pairs_used
+        with self._lock:
+            self.stats.validation_pairs += e.pairs_used
         if e.mean < q.cfg.target_tlb:
-            return False  # stale (near-repeat data drifted): fall through to cold
+            return False, None  # stale (near-repeat drifted): fall to cold
         # runtime_s stays compute-only (matching the cold path's semantics);
         # ServeResult.wall_s carries queue wait + deferral
-        result = DropResult(
+        return True, DropResult(
             v=entry.v,
             mean=entry.mean,
             k=entry.k,
@@ -174,55 +267,88 @@ class DropService:
             runtime_s=time.perf_counter() - tv,
             iterations=[],
         )
-        self._results[q.query_id] = ServeResult(
-            query_id=q.query_id,
-            result=result,
-            cache_hit=True,
-            wall_s=time.perf_counter() - t0,
-        )
-        self.stats.cache_hits += 1
-        return True
 
     # -------------------------------------------------------- scheduling
 
     def _admit(self) -> None:
-        """Move queued queries into flight (or serve them from cache).
+        """Move queued queries into flight (cold runners) or into the
+        validation queue (cache hits, revalidated outside the lock).
 
-        A query whose dataset is already being fitted in flight is deferred:
-        when the running tenant finishes, its basis lands in the cache and
-        the deferred repeat is served by validation instead of a duplicate
-        cold fit (the §5 reuse case under concurrency)."""
+        A query whose dataset is already being fitted or validated in flight
+        is deferred: when the running tenant finishes, its basis lands in
+        the cache and the deferred repeat is served by validation instead of
+        a duplicate cold fit (the §5 reuse case under concurrency). Each
+        admitted query advances the cache TTL clock by one tick, so a TTL
+        counts serving decisions — independent of drain-thread count and of
+        idle polling."""
         deferred: deque[DropQuery] = deque()
-        while self._queue and len(self._inflight) < self.max_inflight:
+        while self._queue and self._inflight_count() < self.max_inflight:
             q = self._queue.popleft()
             if q.t0 is None:
                 q.t0 = time.perf_counter()
             t0, fp = q.t0, q.fingerprint
-            if self.enable_cache and any(
-                fl.fingerprint == fp for fl in self._inflight
-            ):
+            if self.enable_cache and self._fingerprint_inflight(fp):
                 deferred.append(q)
                 continue
-            if self.enable_cache and self._try_cache(q, fp, t0):
-                continue
-            warm_k = (
-                self.cache.get_warm_k(fp, q.cfg.target_tlb)
-                if self.enable_cache
-                else None
-            )
-            # misses count failed lookups, so only when the cache is live;
-            # a warm start is counted as a warm start, not also a miss
-            if warm_k is not None:
-                self.stats.warm_starts += 1
-            elif self.enable_cache:
-                self.stats.cache_misses += 1
-            runner = DropRunner(
-                q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=self.bucket
-            )
-            self._inflight.append(
-                _InFlight(q, runner, fp, warm_started=warm_k is not None, t0=t0)
-            )
+            self.cache.tick()
+            if self.enable_cache:
+                entry = self.cache.get_exact(fp, q.cfg.target_tlb)
+                if entry is not None:
+                    val = _Validation(q, entry, fp, t0)
+                    self._place_validation(val)  # sharded: pick a device
+                    self._validations.append(val)
+                    continue
+            self._launch_cold(q, fp, t0)
         self._queue.extendleft(reversed(deferred))  # keep submission order
+
+    def _place_validation(self, val: _Validation) -> None:
+        """Assign a device to a pending validation (no-op on one device;
+        the sharded subclass load-balances it like a runner)."""
+
+    def _launch_cold(self, q: DropQuery, fp: str, t0: float) -> None:
+        """Warm-start bookkeeping + runner launch. Caller holds the lock."""
+        warm_k = (
+            self.cache.get_warm_k(fp, q.cfg.target_tlb)
+            if self.enable_cache
+            else None
+        )
+        # misses count failed lookups, so only when the cache is live;
+        # a warm start is counted as a warm start, not also a miss
+        if warm_k is not None:
+            self.stats.warm_starts += 1
+        elif self.enable_cache:
+            self.stats.cache_misses += 1
+        self._launch(q, fp, warm_k, t0)
+
+    def _inflight_count(self) -> int:
+        return (
+            len(self._inflight)
+            + len(self._validations)
+            + len(self._stepping_now)
+        )
+
+    def _fingerprint_inflight(self, fp: str) -> bool:
+        return any(fl.fingerprint == fp for fl in self._iter_inflight())
+
+    def _iter_inflight(self):
+        """All live work: placed runners (the sharded subclass adds
+        per-device queues), queued validations, and anything mid-compute
+        outside the lock."""
+        yield from self._inflight
+        yield from self._validations
+        yield from self._stepping_now
+
+    def _launch(
+        self, q: DropQuery, fp: str, warm_k: int | None, t0: float
+    ) -> None:
+        """Build the runner and place it in flight. The sharded subclass
+        overrides this to pick a mesh device and its per-class bucket."""
+        runner = DropRunner(
+            q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=self.bucket
+        )
+        self._inflight.append(
+            _InFlight(q, runner, fp, warm_started=warm_k is not None, t0=t0)
+        )
 
     def _finish(self, fl: _InFlight) -> None:
         res = fl.runner.result()
@@ -247,23 +373,141 @@ class DropService:
                 ),
             )
 
-    def poll(self) -> bool:
-        """One scheduler tick: admit, then run one iteration of the oldest
-        in-flight runner (round-robin). Returns True while work remains."""
-        self._admit()
-        if not self._inflight:
-            return bool(self._queue)
-        fl = self._inflight.popleft()
-        if fl.runner.step():
-            self._inflight.append(fl)  # rotate: fair share of device time
+    def _fail(self, fl: _InFlight, exc: BaseException) -> None:
+        """A runner iteration raised: finish the query with the best basis
+        found so far (or an empty one) and keep the scheduler alive. Caller
+        holds the lock."""
+        try:
+            res = fl.runner.result()  # valid once one iteration completed
+        except Exception:
+            d = fl.query.x.shape[1]
+            res = DropResult(
+                v=np.zeros((d, 0), np.float32), mean=np.zeros(d, np.float32),
+                k=0, tlb_estimate=0.0, satisfied=False, runtime_s=0.0,
+                iterations=list(fl.runner.records),
+            )
+        self.stats.failures += 1
+        self.stats.fit_calls += fl.runner.fit_calls
+        self.stats.iterations += len(res.iterations)  # steps it did complete
+        self._results[fl.query.query_id] = ServeResult(
+            query_id=fl.query.query_id,
+            result=res,
+            warm_started=fl.warm_started,
+            wall_s=time.perf_counter() - fl.t0,
+            error=f"{type(exc).__name__}: {exc}",
+        )
+
+    # ------------------------------------------------- scheduling primitives
+
+    def _pop_runner(self) -> _InFlight | None:
+        """Next runner to step (round-robin). Caller holds the lock."""
+        return self._inflight.popleft() if self._inflight else None
+
+    def _pop_work(self):
+        """Next unit of device compute: pending revalidations first (they
+        are short and serve a waiting tenant), else a runner iteration.
+        Caller holds the lock."""
+        if self._validations:
+            return self._validations.popleft()
+        return self._pop_runner()
+
+    def _requeue_runner(self, fl: _InFlight) -> None:
+        """Rotate a still-live runner back into flight. Caller holds the lock."""
+        self._inflight.append(fl)
+
+    def _step(self, fl: _InFlight) -> bool:
+        """Run one iteration of ``fl`` outside the lock; returns liveness."""
+        alive = fl.runner.step()
+        label = "default" if fl.device is None else str(fl.device)
+        with self._lock:
+            self.stats.device_iterations[label] = (
+                self.stats.device_iterations.get(label, 0) + 1
+            )
+        return alive
+
+    def _work_remains(self) -> bool:
+        return bool(self._queue or self._inflight_count())
+
+    def _notify(self, qids: list[int]) -> None:
+        """Fire the ingest hook with no scheduler lock held (lock order is
+        always hook-side-lock -> scheduler-lock, never the reverse)."""
+        if self.on_result is not None:
+            for qid in qids:
+                self.on_result(qid)
+
+    def _run_validation(self, val: _Validation, done: list[int]) -> None:
+        """Execute one revalidation outside the lock and commit the verdict:
+        a pass serves the cached basis, a fail falls through to a cold
+        launch (with warm-start bookkeeping, exactly like a plain miss)."""
+        try:
+            passed, result = self._validate(val)
+        except Exception:
+            passed, result = False, None  # a broken entry must not serve
+        q = val.query
+        with self._lock:
+            self._stepping_now.remove(val)
+            if passed:
+                self.stats.cache_hits += 1
+                self._results[q.query_id] = ServeResult(
+                    query_id=q.query_id,
+                    result=result,
+                    cache_hit=True,
+                    wall_s=time.perf_counter() - val.t0,
+                )
+                done.append(q.query_id)
+            else:
+                self._launch_cold(q, val.fingerprint, val.t0)
+
+    def _poll_once(self) -> tuple[bool, bool]:
+        """One scheduler tick. Returns (stepped, work_remains)."""
+        with self._lock:
+            self._admit()
+            work = self._pop_work()
+            if work is not None:
+                self._stepping_now.append(work)
+            more = self._work_remains()
+        if work is None:
+            return False, more
+        done: list[int] = []
+        if isinstance(work, _Validation):
+            self._run_validation(work, done)
         else:
-            self._finish(fl)
-        return bool(self._inflight or self._queue)
+            try:
+                alive = self._step(work)  # device compute, outside the lock
+            except Exception as exc:
+                with self._lock:
+                    self._stepping_now.remove(work)
+                    self._fail(work, exc)
+                done.append(work.query.query_id)
+                alive = None
+            if alive is not None:
+                with self._lock:
+                    self._stepping_now.remove(work)
+                    if alive:
+                        self._requeue_runner(work)  # rotate: fair device share
+                    else:
+                        self._finish(work)
+                        done.append(work.query.query_id)
+        with self._lock:
+            more = self._work_remains()
+        self._notify(done)
+        return True, more
+
+    def poll(self) -> bool:
+        """One scheduler tick: admit, then run one unit of work — a pending
+        cache revalidation or one iteration of the oldest in-flight runner
+        (round-robin). Returns True while work remains. Thread-safe:
+        concurrent pollers execute disjoint work items."""
+        return self._poll_once()[1]
 
     def run(self) -> list[ServeResult]:
         """Drain all submitted queries; results ordered by query id."""
         while self.poll():
             pass
-        out = [self._results[qid] for qid in sorted(self._results)]
-        self._results = {}
+        return self._collect_results()
+
+    def _collect_results(self) -> list[ServeResult]:
+        with self._lock:
+            out = [self._results[qid] for qid in sorted(self._results)]
+            self._results = {}
         return out

@@ -28,6 +28,22 @@ def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def serve_devices(n: int | None = None) -> list[jax.Device]:
+    """Devices for the serve-layer tenant mesh (a 1-D "tenant" axis: each
+    in-flight DROP runner is pinned to one device, so placement — not SPMD —
+    is the unit of parallelism).
+
+    ``n=None`` takes every visible device; otherwise the first ``n``,
+    clamped to availability. Mirrors ``ShardCtx(mesh=None)`` fallback
+    semantics: with one visible device the result is ``[default device]``
+    and the sharded scheduler degenerates to the single-host path, so CPU
+    tests run unchanged."""
+    devices = jax.devices()
+    if n is None:
+        return list(devices)
+    return list(devices)[: max(1, min(int(n), len(devices)))]
+
+
 @dataclass
 class ShardCtx:
     mesh: Mesh | None

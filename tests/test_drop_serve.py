@@ -201,6 +201,162 @@ def test_fingerprint_sensitivity():
     assert dataset_fingerprint(x) != dataset_fingerprint(x[:99])
 
 
+def test_fingerprint_append_and_distinct_data():
+    """Appending rows always changes the fingerprint (shape is hashed and
+    the stride re-lands); independently drawn data never collides."""
+    x = np.random.default_rng(1).normal(size=(200, 8)).astype(np.float32)
+    grown = np.concatenate([x, x[:1]], axis=0)
+    assert dataset_fingerprint(grown) != dataset_fingerprint(x)
+    y = np.random.default_rng(2).normal(size=(200, 8)).astype(np.float32)
+    assert dataset_fingerprint(x) != dataset_fingerprint(y)
+
+
+def test_fingerprint_unsampled_permutation_aliases():
+    """Documented aliasing: permuting rows the strided subsample never reads
+    keeps the fingerprint (this is the premise of the TTL staleness bound),
+    while permuting a sampled row changes it."""
+    m = 300  # stride = m // 64 = 4: rows 0, 4, 8, ... and the last are hashed
+    x = np.random.default_rng(3).normal(size=(m, 8)).astype(np.float32)
+    stride = max(1, m // 64)
+    aliased = x.copy()
+    aliased[[1, 2]] = aliased[[2, 1]]  # neither row is sampled
+    assert dataset_fingerprint(aliased) == dataset_fingerprint(x)
+    visible = x.copy()
+    visible[[0, 1]] = visible[[1, 0]]  # row 0 is sampled
+    assert dataset_fingerprint(visible) != dataset_fingerprint(x)
+    assert stride > 2  # the construction above assumes rows 1,2 unsampled
+
+
+# ---------------------------------------------------------------- TTL
+
+
+def test_ttl_entries_expire_and_refresh():
+    entry = lambda k: BasisCacheEntry(  # noqa: E731
+        v=np.eye(4)[:, :k], mean=np.zeros(4), k=k,
+        target_tlb=0.9, tlb_estimate=0.99, satisfied=True,
+    )
+    cache = BasisReuseCache(capacity=4, ttl_ticks=2)
+    cache.put("a", entry(2))
+    cache.tick()
+    assert cache.get_exact("a", 0.9) is not None  # age 1 <= ttl
+    cache.tick()
+    assert cache.get_exact("a", 0.9) is not None  # age 2 == ttl: still fresh
+    cache.tick()
+    assert cache.get_exact("a", 0.9) is None  # age 3 > ttl: expired
+    assert cache.expired_hits == 1
+    assert cache.get_warm_k("a", 0.9) == 2  # warm starts survive expiry
+    cache.put("a", entry(2))  # refit re-inserts: age restarts
+    assert cache.get_exact("a", 0.9) is not None
+
+    forever = BasisReuseCache(capacity=4, ttl_ticks=None)
+    forever.put("a", entry(1))
+    for _ in range(100):
+        forever.tick()
+    assert forever.get_exact("a", 0.9) is not None  # default: never expires
+
+
+def test_ttl_expired_entry_with_degraded_basis_self_heals(monkeypatch):
+    """The staleness hole + its TTL fix. The exact-hit revalidation samples
+    pairs with a seed pinned by the query config, so drift the sampled pairs
+    never see can keep serving a degraded basis forever. Simulate exactly
+    that blind spot by degrading the cached entry (rank-1 truncation) while
+    forcing the validation estimate to pass:
+
+    * without a TTL the degraded entry is served as a cache hit forever;
+    * with a TTL the aged entry is refused, the query refits cold, and the
+      re-inserted entry (fresh basis AND fresh age) serves future hits.
+    """
+    from repro.core.tlb import TLBEstimate
+    from repro.serve_drop import service as service_mod
+
+    (x,) = _datasets(1)
+
+    def poison(svc):
+        ((key, entry),) = [(k, svc.cache._entries[k]) for k in svc.cache.keys()]
+        entry.v = entry.v[:, :1]
+        entry.k = 1
+        return entry
+
+    class _BlindEstimator:
+        """Stands in for drift the seed-pinned validation pairs miss."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def estimate_at_k(self, k, target, **kw):
+            return TLBEstimate(mean=0.999, lo=0.99, hi=1.0, pairs_used=10)
+
+    # -- the hole: no TTL, blind validation => stale k=1 served forever
+    svc = DropService()
+    svc.submit(x, CFG, zero_cost())
+    k_good = svc.run()[0].result.k
+    assert k_good > 1
+    poison(svc)
+    with monkeypatch.context() as m:
+        m.setattr(service_mod, "TLBEstimator", _BlindEstimator)
+        svc.submit(x, CFG, zero_cost())
+        stale = svc.run()[0]
+    assert stale.cache_hit and stale.result.k == 1  # degraded basis served
+
+    # -- the fix: TTL expires the entry, forcing an honest refit
+    svc = DropService(cache_ttl=3)
+    svc.submit(x, CFG, zero_cost())
+    assert svc.run()[0].result.k == k_good
+    poison(svc)
+    for _ in range(4):  # age the entry past the TTL
+        svc.cache.tick()
+    with monkeypatch.context() as m:
+        m.setattr(service_mod, "TLBEstimator", _BlindEstimator)
+        svc.submit(x, CFG, zero_cost())
+        healed = svc.run()[0]
+    # even with validation still blind, the expired entry cannot be served:
+    # the cold refit recovers a real basis and re-inserts it (the refit's
+    # exact k may differ from the first run's — the stale k=1 warm hint
+    # perturbs the importance-sampling trajectory — but it must be a
+    # satisfying, non-degenerate fit)
+    assert not healed.cache_hit
+    assert healed.result.satisfied and healed.result.k > 1
+    svc.submit(x, CFG, zero_cost())
+    again = svc.run()[0]  # fresh entry now serves hits again (self-healed)
+    assert again.cache_hit and again.result.k == healed.result.k
+
+
+# ------------------------------------------------- bucketing mirrors
+# deterministic counterparts of the Hypothesis properties in
+# test_properties_serve.py (those skip when hypothesis is absent)
+
+
+def test_bucket_quantization_idempotent():
+    from repro.core.bucketing import ShapeBucketCache, round_up
+
+    bucket = ShapeBucketCache()
+    for n in (1, 31, 32, 33, 100, 127, 128, 1000):
+        assert round_up(round_up(n, 32), 32) == round_up(n, 32)
+        assert bucket.bucket_pairs(bucket.bucket_pairs(n)) == bucket.bucket_pairs(n)
+        assert bucket.bucket_rows(bucket.bucket_rows(n)) == bucket.bucket_rows(n)
+        for hard in (n, n + 5, 2 * n):
+            b = bucket.bucket_rank(n, hard)
+            assert bucket.bucket_rank(b, hard) == b
+
+
+def test_pair_bucketing_bit_matches_unbucketed():
+    """Zero-padded pair batches, sliced back, must be bit-identical to the
+    unpadded evaluation (padding never reaches the estimate)."""
+    import jax.numpy as jnp
+
+    from repro.core.bucketing import ShapeBucketCache
+    from repro.core.tlb import TLBEstimator
+
+    x = np.random.default_rng(5).normal(size=(80, 12)).astype(np.float32)
+    v = np.linalg.svd(x - x.mean(0), full_matrices=False)[2].T[:, :6]
+    identity = ShapeBucketCache(rank_quantum=1, pair_quantum=1, row_quantum=1)
+    e1 = TLBEstimator(x, jnp.asarray(v), np.random.default_rng(7),
+                      bucket=ShapeBucketCache(pair_quantum=128))
+    e2 = TLBEstimator(x, jnp.asarray(v), np.random.default_rng(7),
+                      bucket=identity)
+    np.testing.assert_array_equal(e1.table(37), e2.table(37))
+
+
 # -------------------------------------------------------------- bookkeeping
 
 

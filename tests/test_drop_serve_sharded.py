@@ -1,0 +1,246 @@
+"""Sharded multi-device DropService + async ingest behavior.
+
+Fast, in-process: single-device fallback parity (the sharded scheduler with
+one device degenerates to the base service), ingest backpressure
+(reject-with-retry-after, never deadlock), and async completion.
+
+Slow, subprocess: a forced 2-device host platform (XLA_FLAGS must precede
+jax init, so it cannot run in the suite's process) checks that the threaded
+2-device drain returns bit-identical per-query results vs the single-device
+path, spreads iterations across both devices, and work-steals.
+"""
+
+import json
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DropConfig, drop
+from repro.core.cost import zero_cost
+from repro.data import sinusoid_mixture
+from repro.serve_drop import (
+    DropService,
+    IngestFrontend,
+    RetryLater,
+    ShardedDropService,
+)
+from repro.sharding.specs import serve_devices
+
+
+def _datasets(n, rows=300, dim=32):
+    return [
+        sinusoid_mixture(rows, dim, rank=4 + i, seed=10 + i)[0] for i in range(n)
+    ]
+
+
+# Eq. 2 termination is wall-clock-adaptive; bit-exact parity pins
+# min_iterations past the schedule length (see test_drop_serve.py)
+PARITY_CFG = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
+CFG = DropConfig(target_tlb=0.95, seed=0)
+
+
+# ------------------------------------------------- single-device fallback
+
+
+def test_serve_devices_clamps_and_defaults():
+    devs = serve_devices()
+    assert len(devs) >= 1
+    assert serve_devices(1) == devs[:1]
+    assert serve_devices(10_000) == devs  # clamped to availability
+    assert serve_devices(0) == devs[:1]  # floor of one device
+
+
+def test_sharded_single_device_matches_base_service():
+    """With one device the sharded scheduler must be the base scheduler:
+    bit-identical results, no steals, occupancy booked on that device."""
+    datasets = _datasets(3)
+    base = DropService(max_inflight=3, enable_cache=False)
+    shard = ShardedDropService(devices=1, max_inflight=3, enable_cache=False)
+    for x in datasets:
+        base.submit(x, PARITY_CFG, zero_cost())
+        shard.submit(x, PARITY_CFG, zero_cost())
+    ref, out = base.run(), shard.run()
+    assert len(out) == len(ref)
+    for r, s in zip(ref, out):
+        assert s.result.k == r.result.k
+        np.testing.assert_array_equal(s.result.v, r.result.v)
+        np.testing.assert_array_equal(s.result.mean, r.result.mean)
+    assert shard.stats.steals == 0
+    assert len(shard.stats.device_iterations) == 1
+    assert sum(shard.stats.device_iterations.values()) == shard.stats.iterations
+
+
+def test_sharded_cache_and_stats_still_work():
+    """The sharded subclass inherits the §5 reuse path unchanged."""
+    (x,) = _datasets(1)
+    svc = ShardedDropService(devices=1)
+    svc.submit(x, CFG, zero_cost())
+    first = svc.run()[0]
+    assert not first.cache_hit and first.result.satisfied
+    svc.submit(x, CFG, zero_cost())
+    assert svc.run()[0].cache_hit
+
+
+# ------------------------------------------------------- async ingest
+
+
+def test_backpressure_rejects_rather_than_deadlocks():
+    """An over-full ingest queue must reject with a retry-after hint —
+    submission never blocks, and accepted queries still complete."""
+    datasets = _datasets(1, rows=200, dim=24) * 6
+    svc = DropService(max_inflight=2, enable_cache=False)
+    fe = IngestFrontend(svc, queue_capacity=2)  # drain NOT started yet
+    accepted, rejections = [], []
+    for x in datasets:
+        try:
+            accepted.append(fe.submit(x, CFG, zero_cost()))
+        except RetryLater as e:
+            rejections.append(e)
+    assert len(accepted) == 2  # capacity bound respected
+    assert len(rejections) == 4
+    assert all(e.retry_after_s > 0 for e in rejections)
+    assert all(e.backlog >= 2 for e in rejections)
+    assert svc.stats.rejected == 4
+
+    fe.start()
+    done = [fe.result(q, timeout=120) for q in accepted]
+    fe.close()
+    assert [r.query_id for r in done] == accepted
+    assert all(r.result.k >= 1 for r in done)
+
+
+def test_async_ingest_accepts_while_draining():
+    """Queries submitted from several threads while the scheduler drains all
+    complete, and capacity frees up as results are taken."""
+    datasets = _datasets(3, rows=200, dim=24)
+    svc = DropService(max_inflight=2, enable_cache=False)
+    results, errors = {}, []
+
+    def client(i: int) -> None:
+        try:
+            x = datasets[i % len(datasets)]
+            while True:
+                try:
+                    qid = fe.submit(x, CFG, zero_cost())
+                    break
+                except RetryLater as e:
+                    time.sleep(e.retry_after_s)
+            results[i] = fe.result(qid, timeout=120)
+        except Exception as exc:  # surfaces in the main thread's assert
+            errors.append(exc)
+
+    with IngestFrontend(svc, queue_capacity=4) as fe:
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+    assert not errors
+    assert sorted(results) == list(range(6))
+    assert all(r.result.k >= 1 for r in results.values())
+
+
+def test_closed_frontend_rejects_submissions():
+    svc = DropService()
+    fe = IngestFrontend(svc, queue_capacity=4)
+    fe.start()
+    fe.close()
+    with pytest.raises(RetryLater):
+        fe.submit(_datasets(1)[0], CFG, zero_cost())
+
+
+def test_failing_runner_does_not_wedge_the_scheduler(monkeypatch):
+    """A runner iteration that raises must finish its query with an error
+    result (not hang run() or leak a max_inflight slot), and the other
+    tenants must still be served."""
+    from repro.core.drop import DropRunner
+
+    datasets = _datasets(3, rows=200, dim=24)
+    real_step = DropRunner.step
+    calls = {"n": 0}
+
+    def step_first_runner_fails(self):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second iteration of the first admitted runner
+            raise RuntimeError("injected device failure")
+        return real_step(self)
+
+    monkeypatch.setattr(DropRunner, "step", step_first_runner_fails)
+    svc = DropService(max_inflight=1, enable_cache=False)
+    ids = [svc.submit(x, CFG, zero_cost()) for x in datasets]
+    out = svc.run()  # must terminate
+    assert [r.query_id for r in out] == ids
+    failed = [r for r in out if r.error]
+    assert len(failed) == 1 and "injected device failure" in failed[0].error
+    assert all(r.result.k >= 1 for r in out if not r.error)
+    assert svc.stats.failures == 1
+    assert svc.backlog() == 0  # no leaked slots or stepping entries
+
+
+# ------------------------------------------- forced 2-device host platform
+
+PROG = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+import jax
+from repro.core import DropConfig
+from repro.core.cost import zero_cost
+from repro.data import sinusoid_mixture
+from repro.serve_drop import DropService, ShardedDropService
+
+assert len(jax.devices()) == 2, jax.devices()
+PARITY_CFG = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
+datasets = [sinusoid_mixture(300, 32, rank=4 + i, seed=10 + i)[0] for i in range(4)]
+
+base = DropService(max_inflight=4, enable_cache=False)
+for x in datasets:
+    base.submit(x, PARITY_CFG, zero_cost())
+ref = base.run()
+
+svc = ShardedDropService(devices=2, max_inflight=4, enable_cache=False)
+assert len(svc.devices) == 2
+for x in datasets:
+    svc.submit(x, PARITY_CFG, zero_cost())
+out = svc.run()
+
+bit_identical = all(
+    s.result.k == r.result.k
+    and np.array_equal(s.result.v, r.result.v)
+    and np.array_equal(s.result.mean, r.result.mean)
+    and len(s.result.iterations) == len(r.result.iterations)
+    for r, s in zip(ref, out)
+)
+print(json.dumps({
+    "bit_identical": bit_identical,
+    "ks": [s.result.k for s in out],
+    "ref_ks": [r.result.k for r in ref],
+    "occupancy": svc.stats.device_iterations,
+    "steals": svc.stats.steals,
+    "iterations": svc.stats.iterations,
+}))
+'''
+
+
+@pytest.mark.slow  # subprocess pays a fresh jax init + 2x cold compiles
+def test_two_device_run_bit_matches_single_device():
+    out = subprocess.run(
+        [sys.executable, "-c", PROG],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["bit_identical"], res
+    assert res["ks"] == res["ref_ks"]
+    # the threaded drain must actually use both devices, and every
+    # iteration must be accounted to exactly one device
+    assert len(res["occupancy"]) == 2, res
+    assert all(n > 0 for n in res["occupancy"].values()), res
+    assert sum(res["occupancy"].values()) == res["iterations"]

@@ -1,0 +1,166 @@
+"""Hypothesis properties for the serve-layer quantization and fingerprint.
+
+Deterministic mirrors of the core invariants live in test_drop_serve.py so
+environments without hypothesis still cover them; this module sweeps random
+shapes. Skipped (not failed) when hypothesis is absent, matching
+test_properties.py.
+
+What is (and is not) claimed about bucketing:
+
+* padding is idempotent — quantizing a quantized size is the identity;
+* pair-batch padding is BIT-exact — padded rows are sliced off before they
+  can touch the estimate, and a row of a pairwise table depends only on its
+  own pair;
+* full ``compute_basis`` through buckets preserves the DECISION — k and
+  satisfiability match an unbucketed run; the basis columns themselves may
+  rotate within near-degenerate singular subspaces when row padding changes
+  the SVD's floating-point path, which is why the service's bit-parity
+  guarantees are always stated for a fixed quantization policy (and the
+  shared-vs-private cache property below is bit-exact).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.basis_search import compute_basis  # noqa: E402
+from repro.core.bucketing import ShapeBucketCache, round_up  # noqa: E402
+from repro.core.tlb import TLBEstimator  # noqa: E402
+from repro.core.types import DropConfig  # noqa: E402
+from repro.serve_drop import dataset_fingerprint  # noqa: E402
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+IDENTITY = dict(rank_quantum=1, pair_quantum=1, row_quantum=1)
+
+
+@st.composite
+def matrices(draw, min_m=8, max_m=60, max_d=16):
+    m = draw(st.integers(min_m, max_m))
+    d = draw(st.integers(4, max_d))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return np.random.default_rng(seed).normal(size=(m, d)).astype(np.float32)
+
+
+# ----------------------------------------------------------- idempotence
+
+
+@given(st.integers(1, 4096), st.integers(1, 512))
+@settings(**SETTINGS)
+def test_round_up_idempotent_and_dominating(n, q):
+    r = round_up(n, q)
+    assert r >= n and r % q == 0
+    assert round_up(r, q) == r
+
+
+@given(st.integers(1, 512), st.integers(1, 512))
+@settings(**SETTINGS)
+def test_bucket_families_idempotent(n, hard):
+    bucket = ShapeBucketCache()
+    assert bucket.bucket_pairs(bucket.bucket_pairs(n)) == bucket.bucket_pairs(n)
+    assert bucket.bucket_rows(bucket.bucket_rows(n)) == bucket.bucket_rows(n)
+    b = bucket.bucket_rank(n, hard)
+    assert bucket.bucket_rank(b, hard) == b
+    assert b >= min(n, max(hard, 1))  # never truncates below the hard cap
+
+
+# ------------------------------------------------------ bit-exactness
+
+
+@given(matrices(), st.integers(1, 8), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_pair_bucketing_bit_matches_unbucketed(x, k, p):
+    """The padded pair batch, sliced back, is bit-identical to the unpadded
+    one: each table row depends only on its own pair, and padded pairs are
+    dropped before any reduction."""
+    k = min(k, min(x.shape))
+    v = np.linalg.svd(x - x.mean(0), full_matrices=False)[2].T[:, :k]
+    p = min(p, x.shape[0] * (x.shape[0] - 1) // 2)
+    e_bucketed = TLBEstimator(
+        x, jnp.asarray(v), np.random.default_rng(11),
+        bucket=ShapeBucketCache(pair_quantum=128),
+    )
+    e_plain = TLBEstimator(
+        x, jnp.asarray(v), np.random.default_rng(11),
+        bucket=ShapeBucketCache(**IDENTITY),
+    )
+    np.testing.assert_array_equal(e_bucketed.table(p), e_plain.table(p))
+
+
+@given(matrices(min_m=12), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_shared_and_private_bucket_caches_bit_match(x, seed):
+    """Quantization is stateless: a tenant routed through a shared (already
+    populated) bucket cache gets bit-identical results to one with a private
+    cache of the same quanta — the property that lets the service share one
+    cache per device class across tenants."""
+    cfg = DropConfig(target_tlb=0.9, svd="full", seed=seed)
+    sample = x[: max(4, x.shape[0] // 2)]
+    shared = ShapeBucketCache()
+    shared.bucket_rows(999)  # pre-populate: statefulness must not leak
+    shared.bucket_pairs(7)
+    r1 = compute_basis(x, sample, None, cfg, jax.random.PRNGKey(seed),
+                       np.random.default_rng(seed + 1), bucket=shared)
+    r2 = compute_basis(x, sample, None, cfg, jax.random.PRNGKey(seed),
+                       np.random.default_rng(seed + 1),
+                       bucket=ShapeBucketCache())
+    assert r1.k == r2.k and r1.satisfied == r2.satisfied
+    assert r1.tlb_mean == r2.tlb_mean
+    np.testing.assert_array_equal(r1.v_full, r2.v_full)
+    np.testing.assert_array_equal(r1.mean, r2.mean)
+
+
+@given(matrices(min_m=12), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_bucketed_compute_basis_preserves_decision(x, seed):
+    """Bucketed vs unbucketed compute_basis: the returned decision (k,
+    satisfiability) must match up to CI noise at the boundary; the docstring
+    explains why the basis itself is only subspace-equal."""
+    cfg = DropConfig(target_tlb=0.9, svd="full", seed=seed)
+    sample = x[: max(4, x.shape[0] // 2)]
+    r1 = compute_basis(x, sample, None, cfg, jax.random.PRNGKey(seed),
+                       np.random.default_rng(seed + 1),
+                       bucket=ShapeBucketCache())
+    r2 = compute_basis(x, sample, None, cfg, jax.random.PRNGKey(seed),
+                       np.random.default_rng(seed + 1),
+                       bucket=ShapeBucketCache(**IDENTITY))
+    assert r1.satisfied == r2.satisfied
+    assert abs(r1.k - r2.k) <= 1  # boundary CI noise, as in test_search_parity
+
+
+# ----------------------------------------------------------- fingerprint
+
+
+@given(matrices(min_m=10), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_fingerprint_appending_rows_changes_it(x, extra):
+    grown = np.concatenate([x, x[:extra]], axis=0)
+    assert dataset_fingerprint(grown) != dataset_fingerprint(x)
+    assert dataset_fingerprint(x) == dataset_fingerprint(x.copy())
+
+
+@given(st.integers(150, 400), st.integers(4, 12),
+       st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_fingerprint_unsampled_permutation_vs_distinct_data(m, d, seed, seed2):
+    """Permuting rows beyond the strided subsample aliases (same
+    fingerprint — the documented trust-domain trade-off the cache TTL
+    bounds), while a truly different dataset of the same shape does not
+    collide with it."""
+    x = np.random.default_rng(seed).normal(size=(m, d)).astype(np.float32)
+    stride = max(1, m // 64)
+    if stride < 3:
+        return  # all rows sampled: nothing to permute invisibly
+    aliased = x.copy()
+    aliased[[1, 2]] = aliased[[2, 1]]  # rows 1, 2 are never in x[::stride]
+    assert dataset_fingerprint(aliased) == dataset_fingerprint(x)
+    other = np.random.default_rng(seed2).normal(size=(m, d)).astype(np.float32)
+    if not np.array_equal(other, x):  # seeds may coincide
+        assert dataset_fingerprint(other) != dataset_fingerprint(x)
