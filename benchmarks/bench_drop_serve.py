@@ -232,18 +232,38 @@ def run(full: bool = False) -> list:
     return out
 
 
+def _emit(rows, json_path: str | None) -> None:
+    """Print harness CSV; optionally also write a JSON artifact (nightly CI
+    throughput tracking — regressions in these numbers are silent in a
+    correctness-only suite)."""
+    for row in rows:
+        print(row.csv())
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(
+                [
+                    {"name": r.name, "us_per_call": r.us_per_call,
+                     "derived": r.derived}
+                    for r in rows
+                ],
+                f, indent=2,
+            )
+        print(f"wrote {json_path}")
+
+
 if __name__ == "__main__":
     if any(a == "--scale-worker" or a.startswith("--scale-worker=")
            for a in sys.argv):
         _scale_worker_main(sys.argv[1:])
-    elif any(a == "--devices" or a.startswith("--devices=")
-             for a in sys.argv):
-        ap = argparse.ArgumentParser()
-        ap.add_argument("--devices", type=int, default=2)
-        ap.add_argument("--tenants", type=int, default=6)
-        args = ap.parse_args()
-        for row in scaling_rows(args.devices, args.tenants):
-            print(row.csv())
     else:
-        for row in run():
-            print(row.csv())
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--devices", type=int, default=None)
+        ap.add_argument("--tenants", type=int, default=6)
+        ap.add_argument("--json", type=str, default=None,
+                        help="also write rows as a JSON artifact")
+        args = ap.parse_args()
+        if args.devices is not None:
+            rows = scaling_rows(args.devices, args.tenants)
+        else:
+            rows = run()
+        _emit(rows, args.json)

@@ -70,7 +70,22 @@ def main() -> None:
               f"tlb={r.tlb_estimate:.4f}  r_i={r.runtime_s*1e3:6.1f} ms  "
               f"pairs={r.pairs_used}")
 
+    optimizer_demo(x[:3000], cfg)
     serve_demo(x[:2000], cfg)
+
+
+def optimizer_demo(x, cfg) -> None:
+    """End-to-end workload optimization (paper §4.4 as an API): every DR
+    operator is a Reducer, and the WorkloadOptimizer races them against the
+    objective R + C_m(k) for a named downstream analytics task. Full bench:
+    python benchmarks/bench_e2e_workload.py"""
+    from repro.pipeline import WorkloadOptimizer
+
+    print("\nWorkloadOptimizer: DROP vs FFT vs PAA for a k-NN workload")
+    report = WorkloadOptimizer(methods=("pca", "fft", "paa"), cfg=cfg).optimize(
+        x, downstream="knn"
+    )
+    print(report.summary())
 
 
 def serve_demo(x, cfg) -> None:

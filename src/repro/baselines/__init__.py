@@ -3,7 +3,7 @@
 
 from repro.baselines.dwt import dwt_transform, dwt_min_k  # noqa: F401
 from repro.baselines.fft import fft_transform, fft_min_k  # noqa: F401
-from repro.baselines.jl import jl_transform  # noqa: F401
+from repro.baselines.jl import jl_min_k, jl_transform  # noqa: F401
 from repro.baselines.paa import paa_transform, paa_min_k  # noqa: F401
 from repro.baselines.svd_pca import (  # noqa: F401
     pca_min_k,

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.tlb import sample_pairs
+from repro.core.tlb import nested_min_k, sample_pairs
 
 
 def _next_pow2(n: int) -> int:
@@ -52,11 +52,4 @@ def dwt_min_k(x: np.ndarray, target: float, n_pairs: int = 800,
     """Smallest k achieving the TLB target (single prefix pass)."""
     rng = np.random.default_rng(seed)
     pairs = sample_pairs(x.shape[0], n_pairs, rng)
-    e = haar_expansion(x)
-    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
-    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
-    diff = (e[pairs[:, 0]] - e[pairs[:, 1]]).astype(np.float64)
-    cum = np.cumsum(diff**2, axis=1)
-    tlb_k = np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
-    ok = np.nonzero(tlb_k >= target)[0]
-    return int(ok[0]) + 1 if ok.size else e.shape[1]
+    return nested_min_k(x, haar_expansion(x), target, pairs)[0]

@@ -15,7 +15,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.tlb import gaussian_ci, sample_pairs
+from repro.core.tlb import (
+    nested_min_k,
+    sample_pairs,
+    transform_tlb_sampled,
+)
 
 
 def fft_real_expansion(x: np.ndarray) -> np.ndarray:
@@ -47,22 +51,10 @@ def fft_min_k(
     expansion + prefix cumsum answers every k at once."""
     rng = np.random.default_rng(seed)
     pairs = sample_pairs(x.shape[0], n_pairs, rng)
-    e = fft_real_expansion(x)
-    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
-    ei, ej = e[pairs[:, 0]], e[pairs[:, 1]]
-    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
-    cum = np.cumsum((ei - ej).astype(np.float64) ** 2, axis=1)
-    tlb_k = np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
-    ok = np.nonzero(tlb_k >= target)[0]
-    return int(ok[0]) + 1 if ok.size else x.shape[1]
+    return nested_min_k(x, fft_real_expansion(x), target, pairs)[0]
 
 
 def fft_tlb_sampled(
     x: np.ndarray, k: int, pairs: np.ndarray
 ) -> tuple[float, float, float]:
-    t = fft_transform(x, k)
-    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
-    ti, tj = t[pairs[:, 0]], t[pairs[:, 1]]
-    dx = np.sqrt(np.maximum(((xi - xj) ** 2).sum(-1), 1e-30))
-    dt = np.sqrt(np.maximum(((ti - tj) ** 2).sum(-1), 0.0))
-    return gaussian_ci(np.where(dx > 1e-15, dt / dx, 1.0), 0.95)
+    return transform_tlb_sampled(x, fft_transform(x, k), pairs, 0.95)

@@ -10,12 +10,36 @@ from __future__ import annotations
 import numpy as np
 
 
+def jl_operator(d: int, k: int, seed: int = 0) -> np.ndarray:
+    """The (d, k) Gaussian projection matrix scaled by 1/sqrt(k)."""
+    rng = np.random.default_rng(seed)
+    # divide before the float32 cast: a float32-array / python-float would
+    # silently promote the operator (and every transform) back to float64
+    return (rng.normal(size=(d, k)) / np.sqrt(k)).astype(np.float32)
+
+
 def jl_transform(x: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
     """(m, d) -> (m, k) Gaussian random projection scaled by 1/sqrt(k)."""
+    return np.asarray(x, dtype=np.float32) @ jl_operator(x.shape[1], k, seed)
+
+
+def jl_min_k(
+    x: np.ndarray, target: float, n_pairs: int = 800, seed: int = 0
+) -> int:
+    """Smallest k whose sampled mean distance ratio reaches ``target``.
+
+    JL is not contractive (ratios straddle 1), but the mean ratio
+    E[chi_k / sqrt(k)] ~= 1 - 1/(4k) grows monotonically toward 1, so the
+    same binary search the paper uses for PAA applies. Each probe redraws
+    the legacy ``jl_transform`` matrix for that k (JL projections are not
+    nested), keeping this exactly the data-independent baseline of §1."""
+    from repro.core.tlb import sample_pairs, transform_min_k
+
     rng = np.random.default_rng(seed)
-    d = x.shape[1]
-    t = rng.normal(size=(d, k)).astype(np.float32) / np.sqrt(k)
-    return np.asarray(x, dtype=np.float32) @ t
+    pairs = sample_pairs(x.shape[0], n_pairs, rng)
+    return transform_min_k(
+        x, lambda a, k: jl_transform(a, k, seed), target, pairs, x.shape[1]
+    )
 
 
 def jl_dimension_bound(m: int, eps: float) -> int:

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.tlb import gaussian_ci, sample_pairs
+from repro.core.tlb import sample_pairs, transform_min_k, transform_tlb_sampled
 
 
 def _segments(d: int, k: int) -> list[tuple[int, int]]:
@@ -33,12 +33,7 @@ def paa_transform(x: np.ndarray, k: int) -> np.ndarray:
 def paa_tlb_sampled(
     x: np.ndarray, k: int, pairs: np.ndarray
 ) -> tuple[float, float, float]:
-    t = paa_transform(x, k)
-    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
-    ti, tj = t[pairs[:, 0]], t[pairs[:, 1]]
-    dx = np.sqrt(np.maximum(((xi - xj) ** 2).sum(-1), 1e-30))
-    dt = np.sqrt(np.maximum(((ti - tj) ** 2).sum(-1), 0.0))
-    return gaussian_ci(np.where(dx > 1e-15, dt / dx, 1.0), 0.95)
+    return transform_tlb_sampled(x, paa_transform(x, k), pairs, 0.95)
 
 
 def paa_min_k(
@@ -51,13 +46,4 @@ def paa_min_k(
     quality is monotone-ish in k as in the paper's study)."""
     rng = np.random.default_rng(seed)
     pairs = sample_pairs(x.shape[0], n_pairs, rng)
-    d = x.shape[1]
-    lo, hi = 1, d
-    while lo < hi:
-        k = (lo + hi) // 2
-        mean, _, _ = paa_tlb_sampled(x, k, pairs)
-        if mean >= target:
-            hi = k
-        else:
-            lo = k + 1
-    return lo
+    return transform_min_k(x, paa_transform, target, pairs, x.shape[1])

@@ -2,10 +2,21 @@
 optimizer with sampled TLB validation and cost-based termination)."""
 
 from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache  # noqa: F401
-from repro.core.drop import DropRunner, drop  # noqa: F401
+from repro.core.drop import DropRunner, PcaDropReducer, drop  # noqa: F401
+from repro.core.reducer import (  # noqa: F401
+    REDUCER_METHODS,
+    DwtReducer,
+    FftReducer,
+    JlReducer,
+    PaaReducer,
+    Reducer,
+    make_reducer,
+    reduce,
+)
 from repro.core.types import (  # noqa: F401
     DEFAULT_SCHEDULE,
     DropConfig,
     DropResult,
     IterationRecord,
+    ReduceResult,
 )

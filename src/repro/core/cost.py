@@ -53,6 +53,26 @@ def zero_cost() -> CostModel:
     return CostModel("zero", lambda k: 0.0)
 
 
+# the paper's three end-to-end analytics are all all-pairs distance tasks:
+# k-NN retrieval, DBSCAN radius queries, and Gaussian KDE each do O(m^2 k)
+# distance work on the reduced data, so they share the quadratic model
+DOWNSTREAM_COSTS = ("knn", "dbscan", "kde")
+
+
+def downstream_cost(
+    name: str, m: int, coeff: float = DEFAULT_KNN_COEFF
+) -> CostModel:
+    """Price a named downstream task from ``analytics/`` as a C_m(k) model —
+    the bridge ``ReduceQuery(downstream=...)`` and the workload optimizer
+    use to make DR cost and analytics cost commensurable (objective
+    R + C_m(k), paper §3.1)."""
+    if name not in DOWNSTREAM_COSTS:
+        raise KeyError(
+            f"unknown downstream {name!r}; know {DOWNSTREAM_COSTS}"
+        )
+    return CostModel(name, knn_cost(m, coeff).fn)
+
+
 def calibrate_quadratic(m_probe: int = 512, d_probe: int = 32) -> float:
     """Measure seconds per (m^2*k) element for all-pairs distance on this host."""
     x = np.random.default_rng(0).normal(size=(m_probe, d_probe)).astype(np.float32)

@@ -9,11 +9,12 @@ The loop is host-driven (termination is data-dependent); all heavy per-
 iteration compute (centering, SVD-Halko, pairwise TLB) is jitted JAX, with
 Pallas kernel routing under ``cfg.use_kernels``.
 
-The loop body lives in ``DropRunner``, a resumable one-iteration-at-a-time
-state machine: ``drop()`` drives it to completion for the classic
-single-query API, and ``repro.serve_drop.DropService`` interleaves ``step()``
-calls across many in-flight queries so early-terminating queries free device
-time for the rest.
+The loop body lives in ``PcaDropReducer``, a resumable one-iteration-at-a-
+time state machine implementing the ``repro.core.reducer.Reducer`` protocol:
+``drop()`` drives it to completion for the classic single-query API, and
+``repro.serve_drop.DropService`` interleaves ``step()`` calls across many
+in-flight queries so early-terminating queries free device time for the
+rest. ``DropRunner`` is the deprecated pre-protocol alias.
 """
 
 from __future__ import annotations
@@ -29,8 +30,8 @@ from repro.core.types import CostFn, DropConfig, DropResult, IterationRecord
 from repro.utils import Clock
 
 
-class DropRunner:
-    """Resumable DROP optimizer state for one query.
+class PcaDropReducer:
+    """Resumable DROP optimizer state for one query (Reducer protocol).
 
     Each ``step()`` runs exactly one Algorithm-2 iteration (sample → fit →
     TLB-search → progress check) and returns True while more iterations
@@ -46,6 +47,9 @@ class DropRunner:
     cached basis was stale for this data), the cap is dropped so later
     iterations search the full rank again.
     """
+
+    method = "pca"
+    cacheable = True  # a fitted basis is exactly what the §5 cache amortizes
 
     def __init__(
         self,
@@ -184,7 +188,11 @@ class DropRunner:
             satisfied=bool(self._best["satisfied"]),
             runtime_s=self.total_runtime,
             iterations=self.records,
+            method=self.method,
         )
+
+
+DropRunner = PcaDropReducer  # deprecated alias (pre-Reducer-protocol name)
 
 
 def drop(

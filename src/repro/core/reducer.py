@@ -1,0 +1,313 @@
+"""Reducer protocol — the method-agnostic face of the DROP optimizer.
+
+The paper's thesis is that dimensionality reduction should be *optimized
+end-to-end* against the downstream workload, not hard-wired to one
+factorization. This module encodes that as an API: every DR operator in the
+comparison (PCA, FFT, PAA, DWT, JL) is a ``Reducer`` — a resumable, steppable
+runner with the same three verbs the serving stack schedules:
+
+* ``step() -> bool`` — run one unit of work; True while more remains.
+  ``PcaDropReducer`` (the Algorithm-2 loop) takes many data-dependent steps;
+  the deterministic baselines are one-step reducers.
+* ``result() -> ReduceResult`` — the fitted (d, k) linear map plus TLB
+  telemetry. Every method here IS a linear map, so one result type (and one
+  cache entry shape, one validation path) serves them all.
+* ``place(device)`` — pin the reducer's compute to a mesh device (the
+  sharded scheduler migrates reducers between steps).
+
+``make_reducer`` is the factory the serving layer uses; ``reduce`` drives
+any method to completion for one-shot callers (the generalization of the
+classic ``drop()``).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.bucketing import ShapeBucketCache
+from repro.core.drop import PcaDropReducer
+from repro.core.types import CostFn, DropConfig, IterationRecord, ReduceResult
+from repro.utils import Clock
+
+
+@runtime_checkable
+class Reducer(Protocol):
+    """What the scheduler needs from a DR operator (see module docstring)."""
+
+    method: str
+    done: bool
+    fit_calls: int
+    records: list
+    cacheable: bool  # may result() be served from the basis-reuse cache?
+
+    def step(self) -> bool: ...
+
+    def result(self) -> ReduceResult: ...
+
+    def place(self, device) -> None: ...
+
+
+def method_operator(method: str, d: int, k: int, seed: int = 0) -> np.ndarray:
+    """Materialize a baseline's (d, k) operator by applying it to the
+    identity. Exact because every method is linear — and it is what lets
+    FFT/PAA/DWT/JL results flow through the same TLB-revalidation and
+    basis-reuse-cache machinery as a PCA basis."""
+    eye = np.eye(d, dtype=np.float32)
+    if method == "fft":
+        from repro.baselines.fft import fft_real_expansion
+
+        return fft_real_expansion(eye)[:, :k]
+    if method == "dwt":
+        from repro.baselines.dwt import haar_expansion
+
+        return haar_expansion(eye)[:, :k]
+    if method == "paa":
+        from repro.baselines.paa import paa_transform
+
+        return paa_transform(eye, k)
+    if method == "jl":
+        from repro.baselines.jl import jl_operator
+
+        return jl_operator(d, k, seed)
+    raise KeyError(f"no materialized operator for method {method!r}")
+
+
+class SingleShotReducer:
+    """Base for the one-step baseline reducers.
+
+    The whole computation (expansion + shared-CI min-k search + operator
+    materialization) happens in the single ``step()``; the scheduler treats
+    it exactly like a one-iteration DROP run. Numerics match the legacy
+    function API bit-for-bit: the min-k search reuses the same shared TLB
+    machinery (``core.tlb.nested_min_k`` / ``transform_min_k``) on the same
+    seeded pair sample — ``cfg.seed`` and ``cfg.max_pairs`` take the roles
+    of the legacy ``seed``/``n_pairs`` arguments (defaults coincide).
+
+    ``warm_prev_k`` and ``bucket`` are accepted for scheduler uniformity and
+    ignored: single-shot methods have no rank bound to seed and no jitted
+    shapes to quantize.
+    """
+
+    method = ""
+    cacheable = True
+
+    def __init__(
+        self,
+        x: np.ndarray,
+        cfg: DropConfig | None = None,
+        cost: CostFn | None = None,
+        *,
+        warm_prev_k: int | None = None,
+        bucket: ShapeBucketCache | None = None,
+    ) -> None:
+        self.cfg = cfg or DropConfig()
+        if cost is None:
+            from repro.core.cost import knn_cost
+
+            cost = knn_cost(x.shape[0])
+        self.cost = cost
+        self.x = np.ascontiguousarray(x, dtype=np.float32)
+        self.records: list[IterationRecord] = []
+        self.fit_calls = 0
+        self.total_runtime = 0.0
+        self.done = False
+        self.device = None
+        self._result: ReduceResult | None = None
+        self._clock = Clock()
+
+    def place(self, device) -> None:
+        """Host-numpy compute: placement is scheduler bookkeeping only."""
+        self.device = device
+
+    def _sample(self) -> np.ndarray:
+        from repro.core.tlb import sample_pairs
+
+        rng = np.random.default_rng(self.cfg.seed)
+        return sample_pairs(self.x.shape[0], self.cfg.max_pairs, rng)
+
+    def _solve(self) -> tuple[int, float, bool, int]:
+        """(k, tlb_mean_at_k, satisfied, pairs_used) — method-specific."""
+        raise NotImplementedError
+
+    def step(self) -> bool:
+        """The one step: search min-k and materialize the operator."""
+        if self.done:
+            return False
+        self._clock.restart()
+        k, tlb_mean, satisfied, pairs = self._solve()
+        v = method_operator(self.method, self.x.shape[1], k, self.cfg.seed)
+        r_i = self._clock.elapsed()
+        self.total_runtime += r_i
+        self.fit_calls += 1
+        self.records.append(
+            IterationRecord(
+                i=0,
+                sample_size=self.x.shape[0],
+                k=k,
+                tlb_estimate=tlb_mean,
+                runtime_s=r_i,
+                objective=r_i + self.cost(k),
+                satisfied=satisfied,
+                pairs_used=pairs,
+            )
+        )
+        self._result = ReduceResult(
+            v=v,
+            mean=np.zeros(self.x.shape[1], np.float32),
+            k=k,
+            tlb_estimate=tlb_mean,
+            satisfied=satisfied,
+            runtime_s=r_i,
+            iterations=self.records,
+            method=self.method,
+        )
+        self.done = True
+        return False
+
+    def result(self) -> ReduceResult:
+        assert self._result is not None, "result() before any step()"
+        return self._result
+
+
+class FftReducer(SingleShotReducer):
+    """Fourier prefix reducer (nested: one expansion answers every k)."""
+
+    method = "fft"
+
+    def _solve(self) -> tuple[int, float, bool, int]:
+        from repro.baselines.fft import fft_real_expansion
+        from repro.core.tlb import nested_min_k
+
+        pairs = self._sample()
+        k, tlb_k = nested_min_k(
+            self.x, fft_real_expansion(self.x), self.cfg.target_tlb, pairs
+        )
+        tlb = float(tlb_k[k - 1])
+        return k, tlb, tlb >= self.cfg.target_tlb, pairs.shape[0]
+
+
+class DwtReducer(SingleShotReducer):
+    """Haar wavelet prefix reducer (nested, coarse-to-fine; k may exceed d
+    when the pow2-padded expansion is wider than the input)."""
+
+    method = "dwt"
+
+    def _solve(self) -> tuple[int, float, bool, int]:
+        from repro.baselines.dwt import haar_expansion
+        from repro.core.tlb import nested_min_k
+
+        pairs = self._sample()
+        k, tlb_k = nested_min_k(
+            self.x, haar_expansion(self.x), self.cfg.target_tlb, pairs
+        )
+        tlb = float(tlb_k[k - 1])
+        return k, tlb, tlb >= self.cfg.target_tlb, pairs.shape[0]
+
+
+class PaaReducer(SingleShotReducer):
+    """PAA segment-count reducer (non-nested: binary search over k)."""
+
+    method = "paa"
+
+    def _solve(self) -> tuple[int, float, bool, int]:
+        from repro.baselines.paa import paa_transform
+        from repro.core.tlb import transform_min_k, transform_tlb_sampled
+
+        pairs = self._sample()
+        k = transform_min_k(
+            self.x, paa_transform, self.cfg.target_tlb, pairs, self.x.shape[1]
+        )
+        mean, _, _ = transform_tlb_sampled(
+            self.x, paa_transform(self.x, k), pairs
+        )
+        return k, float(mean), mean >= self.cfg.target_tlb, pairs.shape[0]
+
+
+class JlReducer(SingleShotReducer):
+    """JL random-projection reducer (data-independent; mean distance ratio
+    is monotone in k, see ``jl_min_k``). Not contractive — ``satisfied``
+    means the mean ratio reached the target, not a lower bound.
+
+    Not cacheable: the operator is fully derived from (d, k, seed), so there
+    is no fitting to amortize — and the serve-layer revalidation estimator
+    clips per-pair ratios at 1 (correct for contractive maps), which would
+    systematically under-read JL's unclipped fit-time mean and fail every
+    repeat at tight targets."""
+
+    method = "jl"
+    cacheable = False
+
+    def _solve(self) -> tuple[int, float, bool, int]:
+        from repro.baselines.jl import jl_transform
+        from repro.core.tlb import transform_min_k, transform_tlb_sampled
+
+        pairs = self._sample()
+        seed = self.cfg.seed
+        k = transform_min_k(
+            self.x,
+            lambda a, kk: jl_transform(a, kk, seed),
+            self.cfg.target_tlb,
+            pairs,
+            self.x.shape[1],
+        )
+        mean, _, _ = transform_tlb_sampled(
+            self.x, jl_transform(self.x, k, seed), pairs
+        )
+        return k, float(mean), mean >= self.cfg.target_tlb, pairs.shape[0]
+
+
+_REDUCERS: dict[str, type] = {
+    "pca": PcaDropReducer,
+    "fft": FftReducer,
+    "paa": PaaReducer,
+    "dwt": DwtReducer,
+    "jl": JlReducer,
+}
+
+REDUCER_METHODS: tuple[str, ...] = tuple(_REDUCERS)
+
+
+def method_cacheable(method: str) -> bool:
+    """Whether ``method``'s results may be served from the basis-reuse
+    cache (the serving layer also skips repeat-deferral for methods that
+    can never be served by it)."""
+    cls = _REDUCERS.get(method)
+    return bool(getattr(cls, "cacheable", True))
+
+
+def make_reducer(
+    method: str,
+    x: np.ndarray,
+    cfg: DropConfig | None = None,
+    cost: CostFn | None = None,
+    *,
+    warm_prev_k: int | None = None,
+    bucket: ShapeBucketCache | None = None,
+) -> Reducer:
+    """Build the Reducer for ``method`` — the factory the serving stack and
+    the workload optimizer share, so admission/scheduling code never
+    branches on the method name."""
+    try:
+        cls = _REDUCERS[method]
+    except KeyError:
+        raise KeyError(
+            f"unknown reduction method {method!r}; know {REDUCER_METHODS}"
+        ) from None
+    return cls(x, cfg, cost, warm_prev_k=warm_prev_k, bucket=bucket)
+
+
+def reduce(
+    x: np.ndarray,
+    method: str = "pca",
+    cfg: DropConfig | None = None,
+    cost: CostFn | None = None,
+) -> ReduceResult:
+    """Run any method's Reducer to completion — the method-agnostic
+    generalization of the classic ``drop()`` (which equals
+    ``reduce(x, "pca", ...)``)."""
+    runner = make_reducer(method, x, cfg, cost)
+    while runner.step():
+        pass
+    return runner.result()

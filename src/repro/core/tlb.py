@@ -36,6 +36,67 @@ def sample_pairs(m: int, p: int, rng: np.random.Generator) -> np.ndarray:
     return np.stack([i, j], axis=1).astype(np.int32)
 
 
+def nested_prefix_tlb(
+    x: np.ndarray, expansion: np.ndarray, pairs: np.ndarray
+) -> np.ndarray:
+    """Sampled mean TLB at EVERY prefix length of a nested expansion.
+
+    ``expansion`` is an (m, kmax) representation whose length-k prefix is the
+    k-dim transform (FFT/DWT/PCA share this property), so one cumsum answers
+    every k at once. This is the shared CI machinery behind every nested
+    baseline's min-k search — float64 accumulation, clipped at 1 (the
+    expansions are contractive up to padding/roundoff)."""
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    dx2 = np.maximum(((xi - xj).astype(np.float64) ** 2).sum(-1), 1e-30)
+    diff = (expansion[pairs[:, 0]] - expansion[pairs[:, 1]]).astype(np.float64)
+    cum = np.cumsum(diff**2, axis=1)
+    return np.sqrt(np.minimum(cum / dx2[:, None], 1.0)).mean(axis=0)
+
+
+def nested_min_k(
+    x: np.ndarray, expansion: np.ndarray, target: float, pairs: np.ndarray
+) -> tuple[int, np.ndarray]:
+    """Smallest prefix length achieving the TLB target (falls back to the
+    full expansion width when nothing clears it). Returns (k, tlb-per-k)."""
+    tlb_k = nested_prefix_tlb(x, expansion, pairs)
+    ok = np.nonzero(tlb_k >= target)[0]
+    k = int(ok[0]) + 1 if ok.size else expansion.shape[1]
+    return k, tlb_k
+
+
+def transform_tlb_sampled(
+    x: np.ndarray, t: np.ndarray, pairs: np.ndarray, confidence: float = 0.95
+) -> tuple[float, float, float]:
+    """Sampled TLB CI of one fixed transform ``t`` of ``x`` (non-nested
+    methods evaluate one k at a time through this)."""
+    xi, xj = x[pairs[:, 0]], x[pairs[:, 1]]
+    ti, tj = t[pairs[:, 0]], t[pairs[:, 1]]
+    dx = np.sqrt(np.maximum(((xi - xj) ** 2).sum(-1), 1e-30))
+    dt = np.sqrt(np.maximum(((ti - tj) ** 2).sum(-1), 0.0))
+    return gaussian_ci(np.where(dx > 1e-15, dt / dx, 1.0), confidence)
+
+
+def transform_min_k(
+    x: np.ndarray,
+    transform_fn,
+    target: float,
+    pairs: np.ndarray,
+    kmax: int,
+) -> int:
+    """Binary search for the smallest k whose sampled mean TLB clears the
+    target, for methods whose representations are not nested (PAA segments,
+    JL redraws) but whose quality is monotone-ish in k."""
+    lo, hi = 1, kmax
+    while lo < hi:
+        k = (lo + hi) // 2
+        mean, _, _ = transform_tlb_sampled(x, transform_fn(x, k), pairs)
+        if mean >= target:
+            hi = k
+        else:
+            lo = k + 1
+    return lo
+
+
 @jax.jit
 def prefix_tlb_table(xi: jax.Array, xj: jax.Array, v: jax.Array) -> jax.Array:
     """(p, d), (p, d), (d, kmax) -> (p, kmax) per-pair TLB at every prefix k."""

@@ -70,24 +70,45 @@ class IterationRecord:
 
 
 @dataclass
-class DropResult:
-    """DROP output: T_k (here V: d x k, plus the train-mean for centering)."""
+class ReduceResult:
+    """Output of any ``Reducer`` — the paper's T_k as an explicit linear map.
 
-    v: np.ndarray  # (d, k) PCA projection matrix (columns = components)
-    mean: np.ndarray  # (d,) training column means
+    Every operator in the comparison (PCA, FFT, PAA, DWT, JL) is a linear
+    transformation, so one representation serves them all: ``v`` is the
+    (d, k) operator matrix and ``mean`` the centering offset (all-zero for
+    the baselines, which do not center). This is what makes the serving
+    stack method-agnostic: the TLB revalidation, the basis-reuse cache, and
+    ``transform`` never need to know which method fitted the map.
+
+    ``DropResult`` is the deprecated alias (the PCA-only era name).
+    """
+
+    v: np.ndarray  # (d, k) linear operator (PCA: basis columns)
+    mean: np.ndarray  # (d,) centering offset (zeros for uncentered methods)
     k: int
     tlb_estimate: float
     satisfied: bool
     runtime_s: float
     iterations: list[IterationRecord] = field(default_factory=list)
+    method: str = "pca"
 
     def transform(self, y: np.ndarray) -> np.ndarray:
-        """Apply the learned transformation (Algorithm 1 TRANSFORM)."""
-        return (np.asarray(y) - self.mean) @ self.v
+        """Apply the learned transformation (Algorithm 1 TRANSFORM).
+
+        Inputs are cast through float32 first: the map was fit in float32,
+        and a float64 caller must see bit-identical outputs to a float32
+        caller (served transforms are cached and compared across tenants).
+        """
+        y32 = np.asarray(y, dtype=np.float32)
+        return (y32 - np.asarray(self.mean, dtype=np.float32)) @ np.asarray(
+            self.v, dtype=np.float32
+        )
 
     @property
     def total_rows_processed(self) -> int:
         return sum(rec.sample_size for rec in self.iterations)
 
+
+DropResult = ReduceResult  # deprecated alias (pre-Reducer API)
 
 CostFn = Callable[[int], float]

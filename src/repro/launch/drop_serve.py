@@ -2,14 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.drop_serve --queries 8
     PYTHONPATH=src python -m repro.launch.drop_serve --devices 2 --async
+    PYTHONPATH=src python -m repro.launch.drop_serve --method pca,fft,paa
 
 Generates a synthetic tenant workload (a pool of distinct datasets, with a
 configurable fraction of repeat submissions — the paper-§5 regime), drains it
 through ``DropService`` (or the sharded multi-device scheduler with
 ``--devices N``, and the threaded ingest front-end with ``--async``), and
 reports queries/sec, cache behavior, per-device occupancy, and the shared
-shape-bucket population. ``--compare-sequential`` also times cold ``drop()``
-per query for a direct speedup figure.
+shape-bucket population. ``--method`` picks the Reducer per query (a comma
+list cycles across the workload — FFT/PAA queries are scheduled and cached
+exactly like DROP); ``--downstream`` prices the named analytics task as the
+cost model. ``--compare-sequential`` also times cold ``reduce()`` per query
+for a direct speedup figure.
 """
 
 from __future__ import annotations
@@ -52,8 +56,9 @@ _force_host_devices_from_argv()
 
 import numpy as np  # noqa: E402
 
-from repro.core import DropConfig, drop  # noqa: E402
-from repro.core.cost import knn_cost  # noqa: E402
+from repro.core import DropConfig, reduce  # noqa: E402
+from repro.core.cost import downstream_cost  # noqa: E402
+from repro.core.reducer import REDUCER_METHODS  # noqa: E402
 from repro.data import sinusoid_mixture  # noqa: E402
 from repro.serve_drop import (  # noqa: E402
     DropService,
@@ -75,14 +80,14 @@ def build_workload(
     return [pool[i % n_datasets] for i in range(n_queries)]
 
 
-def _submit_async(fe: IngestFrontend, datasets, cfg, cost) -> list[int]:
+def _submit_async(fe: IngestFrontend, datasets, methods, cfg, cost) -> list[int]:
     """Stream submissions through the bounded ingest queue, honoring
     reject-with-retry-after backpressure."""
     qids = []
-    for x in datasets:
+    for x, m in zip(datasets, methods):
         while True:
             try:
-                qids.append(fe.submit(x, cfg, cost))
+                qids.append(fe.submit(x, cfg, cost, method=m))
                 break
             except RetryLater as e:
                 time.sleep(e.retry_after_s)
@@ -97,6 +102,12 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=1500)
     ap.add_argument("--dim", type=int, default=96)
     ap.add_argument("--target", type=float, default=0.98)
+    ap.add_argument("--method", type=str, default="pca",
+                    help="reduction method per query; a comma list (e.g. "
+                         "'pca,fft,paa') cycles across the workload")
+    ap.add_argument("--downstream", type=str, default="knn",
+                    choices=("knn", "dbscan", "kde"),
+                    help="analytics task priced as the downstream cost model")
     ap.add_argument("--max-inflight", type=int, default=4)
     ap.add_argument("--cache-entries", type=int, default=16)
     ap.add_argument("--cache-ttl", type=int, default=None,
@@ -118,8 +129,13 @@ def main() -> None:
         args.queries, max(1, min(args.datasets, args.queries)),
         args.rows, args.dim, args.seed,
     )
+    methods = [m.strip() for m in args.method.split(",") if m.strip()]
+    unknown = [m for m in methods if m not in REDUCER_METHODS]
+    if unknown:
+        ap.error(f"unknown --method {unknown}; know {REDUCER_METHODS}")
+    methods = [methods[i % len(methods)] for i in range(args.queries)]
     cfg = DropConfig(target_tlb=args.target, seed=args.seed)
-    cost = knn_cost(args.rows)
+    cost = downstream_cost(args.downstream, args.rows)
 
     if args.devices > 1:
         svc = ShardedDropService(
@@ -138,22 +154,23 @@ def main() -> None:
             enable_cache=not args.no_cache,
             cache_ttl=args.cache_ttl,
         )
-    # warm the jit caches with one cold drop() per distinct dataset so the
-    # reported throughput measures serving, not XLA compilation (plain drop()
-    # shares the shape buckets but never touches the service cache)
-    for x in datasets[: args.datasets]:
-        drop(x, cfg, cost=cost)
+    # warm the jit caches with one cold reduce() per distinct (dataset,
+    # method) pair so the reported throughput measures serving, not XLA
+    # compilation (plain reduce() shares the shape buckets but never touches
+    # the service cache; the baseline single-shots compile nothing)
+    for i, x in enumerate(datasets[: args.datasets]):
+        reduce(x, methods[i], cfg, cost)
 
     t0 = time.perf_counter()
     if args.use_async:
         with IngestFrontend(svc, queue_capacity=args.queue_capacity) as fe:
-            qids = _submit_async(fe, datasets, cfg, cost)
+            qids = _submit_async(fe, datasets, methods, cfg, cost)
             results = sorted(
                 (fe.result(q) for q in qids), key=lambda r: r.query_id
             )
     else:
-        for x in datasets:
-            svc.submit(x, cfg, cost)
+        for x, m in zip(datasets, methods):
+            svc.submit(x, cfg, cost, method=m)
         results = svc.run()
     dt = time.perf_counter() - t0
 
@@ -176,15 +193,16 @@ def main() -> None:
     print(f"buckets: {svc.bucket.summary()}")
     for r in results:
         tag = "HIT " if r.cache_hit else ("WARM" if r.warm_started else "COLD")
-        print(f"  q{r.query_id:02d} [{tag}] k={r.result.k:3d} "
-              f"tlb={r.result.tlb_estimate:.4f} wall={r.wall_s*1e3:7.1f} ms")
+        print(f"  q{r.query_id:02d} [{tag}] {r.result.method:3s} "
+              f"k={r.result.k:3d} tlb={r.result.tlb_estimate:.4f} "
+              f"wall={r.wall_s*1e3:7.1f} ms")
 
     if args.compare_sequential:
         t0 = time.perf_counter()
-        for x in datasets:
-            drop(x, cfg, cost=cost)
+        for x, m in zip(datasets, methods):
+            reduce(x, m, cfg, cost)
         t_seq = time.perf_counter() - t0
-        print(f"sequential cold drop(): {t_seq*1e3:.0f} ms "
+        print(f"sequential cold reduce(): {t_seq*1e3:.0f} ms "
               f"({args.queries/t_seq:.2f} queries/sec) -> "
               f"service speedup {t_seq/dt:.2f}x")
 

@@ -1,9 +1,11 @@
-"""Multi-tenant DROP serving: batched queries, shared shape buckets, a
-basis-reuse cache that amortizes fitting across repeat workloads (paper §5),
-a sharded multi-device scheduler, and an async ingest front-end.
+"""Multi-tenant DR serving: batched ``ReduceQuery``s over any ``Reducer``
+method (pca/fft/paa/dwt/jl), shared shape buckets, a method-agnostic reuse
+cache that amortizes fitting across repeat workloads (paper §5) including
+append-only prefix matching, a sharded multi-device scheduler, and an async
+ingest front-end.
 
-See README.md in this package for the scheduler state machine and the
-cache hierarchy."""
+See README.md in this package for the scheduler state machine, the cache
+hierarchy, and the migration table from the PCA-only era names."""
 
 from repro.serve_drop.cache import (  # noqa: F401
     BasisCacheEntry,
@@ -17,6 +19,7 @@ from repro.serve_drop.ingest import (  # noqa: F401
 from repro.serve_drop.service import (  # noqa: F401
     DropQuery,
     DropService,
+    ReduceQuery,
     ServeResult,
     ServiceStats,
 )

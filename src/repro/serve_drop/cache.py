@@ -1,22 +1,29 @@
-"""LRU basis-reuse cache for repeat DROP workloads (paper §5).
+"""LRU reuse cache for fitted reduction operators (paper §5).
 
 §5 of the paper shows that when workloads repeat — the common case for a
 DR service fronting dashboards or periodic batch analytics — reusing the
-fitted basis converts DROP's cost into a single cheap TLB validation. The
+fitted map converts DROP's cost into a single cheap TLB validation. The
 related lazy-PCA line of work (arXiv:1709.07175) makes the same argument:
 amortize the expensive factorization across queries and recompute lazily
-only when the validation fails.
+only when the validation fails. Since every ``Reducer`` (PCA, FFT, PAA,
+DWT, JL) produces the same artifact — a (d, k) linear map — the cache is
+method-agnostic: FFT/PAA results are as cacheable as PCA bases.
 
-Entries are keyed by (dataset fingerprint, quantized TLB target):
+Entries are keyed by (dataset fingerprint, method, quantized TLB target):
 
-* **exact hit** — same data, same (or looser) target: the cached (V, mean, k)
-  is revalidated against the live data with a sampled TLB estimate and, if it
-  still clears the target, served without any fitting.
-* **warm hit** — same data but no reusable entry: a cold run still starts
-  with ``prev_k`` seeded from the smallest cached satisfying k fitted at a
-  target >= the request's, shrinking the first Halko fit. Entries fitted at
-  looser targets are ignored here — their smaller k is not a valid upper
-  bound for a tighter search.
+* **exact hit** — same data, same method, same (or looser) target: the
+  cached (V, mean, k) is revalidated with a sampled TLB estimate on the
+  live data and, if it still clears the target, served without any fitting.
+* **prefix hit** — append-only streams: a dataset grown by appended rows
+  misses on its full fingerprint, but if a cached entry's row count marks a
+  prefix whose fingerprint matches, the cached map is revalidated on the
+  FULL grown data (suffix included) instead of refitting cold. A pass
+  serves the entry and re-registers it under the grown fingerprint.
+* **warm hit** — same data/method but no reusable entry: a cold PCA run
+  still starts with ``prev_k`` seeded from the smallest cached satisfying k
+  fitted at a target >= the request's. Entries fitted at looser targets are
+  ignored here — their smaller k is not a valid upper bound for a tighter
+  search.
 
 The fingerprint is a content hash over the array's shape/dtype and a strided
 row subsample — O(sqrt) of the data, collision-safe in practice for the
@@ -32,7 +39,15 @@ drain-thread count and of idle polling) is no longer served from
 ``get_exact`` even when the fingerprint matches, forcing a full refit whose
 result re-populates the entry with a fresh basis AND a fresh age. Expired
 entries still seed warm starts — a stale warm rank bound is
-self-correcting in ``DropRunner``.
+self-correcting in ``PcaDropReducer``.
+
+TTL auto-tuning (``auto_ttl=True``): revalidation verdicts reported via
+``note_validation`` steer the effective TTL between 1 and the configured
+``ttl_ticks`` — a failed revalidation (observed drift) halves it, a
+sustained run of validated hits doubles it back. Under drift the blind-spot
+window shrinks toward "refit every time"; on a stable workload it recovers
+the configured reuse budget. The service surfaces the live value as
+``ServiceStats.effective_ttl``.
 """
 
 from __future__ import annotations
@@ -46,6 +61,9 @@ import numpy as np
 # targets within one TLB "mil" share a cache slot: serving a 0.9801-target
 # query from a 0.98-fitted basis is exactly the §5 reuse story
 TARGET_QUANTUM = 1e-3
+
+# validated-hit streak that earns one TTL doubling under auto_ttl
+AUTO_TTL_GROW_STREAK = 4
 
 
 def dataset_fingerprint(x: np.ndarray, max_rows: int = 64) -> str:
@@ -66,7 +84,7 @@ def quantize_target(target: float) -> int:
 
 @dataclass
 class BasisCacheEntry:
-    """A fitted basis worth reusing: the paper's T_k plus its provenance."""
+    """A fitted map worth reusing: the paper's T_k plus its provenance."""
 
     v: np.ndarray  # (d, k)
     mean: np.ndarray  # (d,)
@@ -74,28 +92,43 @@ class BasisCacheEntry:
     target_tlb: float
     tlb_estimate: float
     satisfied: bool
+    method: str = "pca"
+    rows: int = 0  # fitted dataset's row count (prefix matching key)
     born_tick: int = 0  # stamped by put(); age = cache clock - born_tick
 
 
 class BasisReuseCache:
-    """Bounded LRU over fitted bases, with exact and warm-start lookups.
+    """Bounded LRU over fitted maps, with exact/prefix/warm-start lookups.
 
     ``ttl_ticks`` (None = never expire) caps how long an entry may serve
     exact hits: past the TTL the entry is invisible to ``get_exact`` — the
-    query refits cold and ``put`` re-inserts it with a fresh age."""
+    query refits cold and ``put`` re-inserts it with a fresh age. With
+    ``auto_ttl`` the live bound floats between 1 and ``ttl_ticks`` on
+    revalidation verdicts (see module docstring)."""
 
-    def __init__(self, capacity: int = 16, ttl_ticks: int | None = None) -> None:
+    def __init__(
+        self,
+        capacity: int = 16,
+        ttl_ticks: int | None = None,
+        auto_ttl: bool = False,
+    ) -> None:
         self.capacity = max(int(capacity), 1)
+        self.base_ttl = ttl_ticks
         self.ttl_ticks = ttl_ticks
-        self._entries: OrderedDict[tuple[str, int], BasisCacheEntry] = OrderedDict()
+        self.auto_ttl = auto_ttl and ttl_ticks is not None
+        self._entries: OrderedDict[
+            tuple[str, str, int], BasisCacheEntry
+        ] = OrderedDict()
         self.evictions = 0
         self.expired_hits = 0
+        self.validation_failures = 0
+        self._streak = 0  # consecutive validated hits (auto-TTL growth)
         self._now = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def keys(self) -> list[tuple[str, int]]:
+    def keys(self) -> list[tuple[str, str, int]]:
         return list(self._entries.keys())
 
     def tick(self) -> int:
@@ -103,25 +136,51 @@ class BasisReuseCache:
         self._now += 1
         return self._now
 
+    def note_validation(self, passed: bool) -> None:
+        """Feed a revalidation verdict to the TTL auto-tuner: failures are
+        observed drift (shrink the blind-spot window), sustained validated
+        hits earn the configured budget back."""
+        if not passed:
+            self.validation_failures += 1
+        if not self.auto_ttl:
+            return
+        if passed:
+            self._streak += 1
+            if self._streak >= AUTO_TTL_GROW_STREAK:
+                self._streak = 0
+                self.ttl_ticks = min(self.base_ttl, max(self.ttl_ticks, 1) * 2)
+        else:
+            self._streak = 0
+            self.ttl_ticks = max(1, self.ttl_ticks // 2)
+
     def _expired(self, entry: BasisCacheEntry) -> bool:
         return (
             self.ttl_ticks is not None
             and self._now - entry.born_tick > self.ttl_ticks
         )
 
-    def get_exact(self, fp: str, target: float) -> BasisCacheEntry | None:
-        """A satisfying entry for this dataset fitted at a target >= ours
-        (checked loosest-first is unnecessary: any such basis, revalidated,
-        serves the request). Refreshes LRU recency. Entries past the TTL are
-        skipped (counted in ``expired_hits``): the caller falls through to a
-        cold refit, which re-inserts a fresh entry."""
+    def _eligible(
+        self, key: tuple[str, str, int], fp: str, method: str, qt: int
+    ) -> bool:
+        return (
+            key[0] == fp
+            and key[1] == method
+            and key[2] >= qt
+            and self._entries[key].satisfied
+        )
+
+    def get_exact(
+        self, fp: str, target: float, method: str = "pca"
+    ) -> BasisCacheEntry | None:
+        """A satisfying entry for this dataset/method fitted at a target >=
+        ours (checked loosest-first is unnecessary: any such map,
+        revalidated, serves the request). Refreshes LRU recency. Entries
+        past the TTL are skipped (counted in ``expired_hits``): the caller
+        falls through to a cold refit, which re-inserts a fresh entry."""
+        qt = quantize_target(target)
         candidates = []
         for key, entry in self._entries.items():
-            if not (
-                key[0] == fp
-                and key[1] >= quantize_target(target)
-                and entry.satisfied
-            ):
+            if not self._eligible(key, fp, method, qt):
                 continue
             if self._expired(entry):
                 self.expired_hits += 1
@@ -129,26 +188,65 @@ class BasisReuseCache:
                 candidates.append(key)
         if not candidates:
             return None
-        # prefer the smallest satisfying basis among eligible targets
+        # prefer the smallest satisfying map among eligible targets
         key = min(candidates, key=lambda c: self._entries[c].k)
         self._entries.move_to_end(key)
         return self._entries[key]
 
-    def get_warm_k(self, fp: str, target: float) -> int | None:
+    def prefix_row_counts(
+        self, m: int, d: int, target: float, method: str = "pca"
+    ) -> list[int]:
+        """Candidate strict-prefix lengths for an (m, d) dataset: the row
+        counts of live satisfying entries of this method/target. Metadata
+        scan only — the caller hashes the prefixes OUTSIDE the scheduler
+        lock (see ``DropService.try_submit``) and matches via
+        ``find_prefix``. Longest first: they validated the most rows."""
+        qt = quantize_target(target)
+        return sorted(
+            {
+                e.rows
+                for key, e in self._entries.items()
+                if key[1] == method
+                and key[2] >= qt
+                and e.satisfied
+                and 0 < e.rows < m
+                and e.v.shape[0] == d
+                and not self._expired(e)
+            },
+            reverse=True,
+        )
+
+    def find_prefix(
+        self, prefix_fps: dict[int, str], target: float, method: str = "pca"
+    ) -> BasisCacheEntry | None:
+        """Append-only stream reuse: an entry fitted on a strict PREFIX of
+        the query's dataset (matched against the submit-time-hashed
+        ``prefix_fps``: rows -> fingerprint of x[:rows]) whose map can be
+        revalidated on the grown data instead of refitting cold."""
+        for rows in sorted(prefix_fps, reverse=True):
+            entry = self.get_exact(prefix_fps[rows], target, method)
+            if entry is not None and entry.rows == rows:
+                return entry
+        return None
+
+    def get_warm_k(
+        self, fp: str, target: float, method: str = "pca"
+    ) -> int | None:
         """Rank bound for a cold run on known data: the smallest cached
         satisfying k whose fit target was >= the request's (a basis fitted at
         a looser target cannot bound a tighter search). Expired entries still
         qualify — a stale bound is a hint the runner drops after one failed
         iteration, so it cannot poison the refit."""
+        qt = quantize_target(target)
         ks = [
             e.k
-            for (efp, tq), e in self._entries.items()
-            if efp == fp and e.satisfied and tq >= quantize_target(target)
+            for (efp, meth, tq), e in self._entries.items()
+            if efp == fp and meth == method and e.satisfied and tq >= qt
         ]
         return min(ks) if ks else None
 
     def put(self, fp: str, entry: BasisCacheEntry) -> None:
-        key = (fp, quantize_target(entry.target_tlb))
+        key = (fp, entry.method, quantize_target(entry.target_tlb))
         entry.born_tick = self._now  # (re)insertion restarts the TTL clock
         if key in self._entries:
             self._entries.move_to_end(key)

@@ -126,16 +126,22 @@ class IngestFrontend:
         x: np.ndarray,
         cfg: DropConfig | None = None,
         cost: CostFn | None = None,
+        *,
+        method: str = "pca",
+        downstream: str | None = None,
     ) -> int:
-        """Enqueue a query from any thread. Raises ``RetryLater`` when the
-        bounded queue is full (backpressure) or the frontend is closed.
-        The capacity check is atomic with the enqueue (``try_submit``), so
-        concurrent submitters can never jointly overshoot the bound."""
+        """Enqueue a query from any thread (any Reducer ``method``; the
+        single-shot baselines are one-step runners to the scheduler).
+        Raises ``RetryLater`` when the bounded queue is full (backpressure)
+        or the frontend is closed. The capacity check is atomic with the
+        enqueue (``try_submit``), so concurrent submitters can never
+        jointly overshoot the bound."""
         if self._closing.is_set() or self._stop.is_set():
             backlog = self.service.backlog()
             raise RetryLater(self._retry_after(backlog), backlog)
         qid = self.service.try_submit(
-            x, cfg, cost, max_backlog=self.queue_capacity
+            x, cfg, cost, method=method, downstream=downstream,
+            max_backlog=self.queue_capacity,
         )
         if qid is None:
             backlog = self.service.backlog()

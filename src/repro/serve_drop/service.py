@@ -1,23 +1,29 @@
-"""DropService: batched multi-query DROP with basis reuse.
+"""DropService: batched multi-query dimensionality reduction with reuse.
 
-The service accepts many DR queries (dataset + target TLB + downstream cost
-function) and drives them through the shared device:
+The service accepts many DR queries — each a ``ReduceQuery``: dataset +
+method (any ``Reducer``: pca/fft/paa/dwt/jl) + target TLB + downstream cost
+(a callable, or a named analytics task priced via ``core.cost``) — and
+drives them through the shared device:
 
 * **admission** — each query is fingerprinted and checked against the
-  ``BasisReuseCache``. An exact hit is revalidated with a sampled TLB
-  estimate on the live data (no fitting at all); a warm hit seeds the
-  §3.4.3 rank bound of a cold run; a miss runs cold.
-* **scheduling** — cold runs are ``DropRunner`` state machines; the
-  scheduler round-robins single iterations across up to ``max_inflight``
-  runners, so a query that terminates after two cheap iterations frees its
-  slot immediately instead of queueing behind a heavy tenant.
+  ``BasisReuseCache`` (keyed fingerprint × method × target). An exact hit
+  is revalidated with a sampled TLB estimate on the live data (no fitting
+  at all); an append-only stream whose PREFIX fingerprint matches a cached
+  entry revalidates that entry on the grown data; a warm hit seeds the
+  §3.4.3 rank bound of a cold PCA run; a miss runs cold.
+* **scheduling** — cold runs are ``Reducer`` state machines built by
+  ``make_reducer`` (DROP's multi-step Algorithm-2 loop for PCA; one-step
+  runners for the deterministic baselines); the scheduler round-robins
+  single steps across up to ``max_inflight`` runners, so a query that
+  terminates after two cheap iterations frees its slot immediately instead
+  of queueing behind a heavy tenant.
 * **shape sharing** — all runners and validators quantize through one
   ``ShapeBucketCache``, so tenants with compatible shapes reuse each
   other's XLA executables (the jit cache is keyed by shape).
 
-Per-query numerics are identical to sequential ``drop()`` with the same
-config: every runner owns its RNG streams, and interleaving never reorders
-any single query's draws.
+Per-query numerics are identical to the sequential ``reduce()``/``drop()``
+APIs with the same config: every runner owns its RNG streams, and
+interleaving never reorders any single query's draws.
 
 Thread-safety: ``submit``, ``poll``, and ``take_result`` may be called from
 different threads — one scheduler lock guards the queue, flight, cache, and
@@ -43,9 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache
-from repro.core.drop import DropRunner
+from repro.core.reducer import Reducer, make_reducer, method_cacheable
 from repro.core.tlb import TLBEstimator
-from repro.core.types import CostFn, DropConfig, DropResult
+from repro.core.types import CostFn, DropConfig, ReduceResult
 from repro.serve_drop.cache import (
     BasisCacheEntry,
     BasisReuseCache,
@@ -54,22 +60,34 @@ from repro.serve_drop.cache import (
 
 
 @dataclass
-class DropQuery:
-    """One tenant request: reduce ``x`` to the smallest TLB-preserving basis."""
+class ReduceQuery:
+    """One tenant request: reduce ``x`` to the smallest TLB-preserving map
+    with ``method``, priced against ``cost`` (or the named ``downstream``
+    analytics task). ``DropQuery`` is the deprecated PCA-era alias."""
 
     query_id: int
     x: np.ndarray
     cfg: DropConfig
     cost: CostFn | None = None
+    method: str = "pca"
+    downstream: str | None = None  # provenance; cost resolved at submit()
     fingerprint: str = ""  # computed once at submit()
+    # rows -> fingerprint of x[:rows] for cached candidate prefix lengths,
+    # hashed on the submitter's thread (append-only stream matching); best
+    # effort — entries cached after submit() are not probed
+    prefix_fps: dict = field(default_factory=dict)
     t0: float | None = None  # pinned at first dequeue (includes deferral time)
+
+
+DropQuery = ReduceQuery  # deprecated alias (pre-Reducer-protocol name)
 
 
 @dataclass
 class ServeResult:
     query_id: int
-    result: DropResult
+    result: ReduceResult
     cache_hit: bool = False  # served straight from the basis cache
+    prefix_hit: bool = False  # cache hit via append-only prefix fingerprint
     warm_started: bool = False  # cold run, but rank bound seeded from cache
     wall_s: float = 0.0
     error: str | None = None  # set when the query's runner raised mid-flight
@@ -79,6 +97,7 @@ class ServeResult:
 class ServiceStats:
     queries: int = 0
     cache_hits: int = 0
+    prefix_hits: int = 0  # subset of cache_hits served via prefix matching
     cache_misses: int = 0
     warm_starts: int = 0
     fit_calls: int = 0
@@ -87,6 +106,7 @@ class ServiceStats:
     failures: int = 0  # queries finished with ServeResult.error set
     rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
     steals: int = 0  # runners migrated to an idle device between rounds
+    effective_ttl: int | None = None  # live auto-tuned cache TTL (ticks)
     # per-device occupancy: device label -> iterations stepped there; the
     # single-host service books everything under "default"
     device_iterations: dict = field(default_factory=dict)
@@ -97,8 +117,8 @@ class ServiceStats:
 
 @dataclass(eq=False)  # identity semantics: scheduler queues remove by object
 class _InFlight:
-    query: DropQuery
-    runner: DropRunner
+    query: ReduceQuery
+    runner: Reducer
     fingerprint: str
     warm_started: bool
     t0: float  # queue-pinned at first dequeue (includes deferral time)
@@ -111,11 +131,12 @@ class _Validation:
     like a runner iteration (outside the lock) instead of inside admission.
     Its fingerprint stays visible to the dedup check while it runs."""
 
-    query: DropQuery
+    query: ReduceQuery
     entry: BasisCacheEntry
     fingerprint: str
     t0: float
     device: object = None  # mesh device to validate on (sharded)
+    prefix: bool = False  # entry matched via prefix fingerprint (append)
 
 
 class DropService:
@@ -129,15 +150,18 @@ class DropService:
         bucket: ShapeBucketCache | None = None,
         enable_cache: bool = True,
         cache_ttl: int | None = None,
+        cache_ttl_auto: bool = False,
     ) -> None:
         self.max_inflight = max(int(max_inflight), 1)
         # share the process-wide buckets by default: plain drop() calls (e.g.
         # the CLI's jit warmup) and the service then compile the same shapes
         self.bucket = bucket or DEFAULT_BUCKETS
-        self.cache = BasisReuseCache(capacity=cache_entries, ttl_ticks=cache_ttl)
+        self.cache = BasisReuseCache(
+            capacity=cache_entries, ttl_ticks=cache_ttl, auto_ttl=cache_ttl_auto
+        )
         self.enable_cache = enable_cache
-        self.stats = ServiceStats()
-        self._queue: deque[DropQuery] = deque()
+        self.stats = ServiceStats(effective_ttl=self.cache.ttl_ticks)
+        self._queue: deque[ReduceQuery] = deque()
         self._inflight: deque[_InFlight] = deque()
         self._validations: deque[_Validation] = deque()
         self._results: dict[int, ServeResult] = {}
@@ -160,12 +184,21 @@ class DropService:
         x: np.ndarray,
         cfg: DropConfig | None = None,
         cost: CostFn | None = None,
+        *,
+        method: str = "pca",
+        downstream: str | None = None,
     ) -> int:
         """Enqueue a query; returns its id (results keyed by it).
 
+        ``method`` selects the Reducer (pca/fft/paa/dwt/jl); ``downstream``
+        names an analytics task (knn/dbscan/kde) to price as the cost model
+        when ``cost`` is not given explicitly.
+
         Thread-safe: the fingerprint is hashed outside the scheduler lock, so
         concurrent submitters only serialize on the queue append."""
-        qid = self.try_submit(x, cfg, cost)
+        qid = self.try_submit(
+            x, cfg, cost, method=method, downstream=downstream
+        )
         assert qid is not None  # unbounded submit never rejects
         return qid
 
@@ -175,6 +208,8 @@ class DropService:
         cfg: DropConfig | None = None,
         cost: CostFn | None = None,
         *,
+        method: str = "pca",
+        downstream: str | None = None,
         max_backlog: int | None = None,
     ) -> int | None:
         """Enqueue unless the backlog is at ``max_backlog``; returns the
@@ -182,12 +217,25 @@ class DropService:
         one critical section, so concurrent submitters cannot jointly
         overshoot the bound (ingest backpressure relies on this).
 
-        The O(m*d) float32/contiguity conversion happens HERE, on the
-        submitter's thread outside the scheduler lock — the runner and the
-        validation path then take zero-copy views, so admission under the
-        lock never copies a tenant's dataset."""
+        The O(m*d) float32/contiguity conversion AND all fingerprint hashing
+        (full + candidate prefixes) happen HERE, on the submitter's thread
+        outside the scheduler lock — the runner and the validation path then
+        take zero-copy views, so admission under the lock never copies or
+        hashes a tenant's dataset."""
         x = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
+        cfg = cfg or DropConfig()
         fp = dataset_fingerprint(x)
+        if cost is None and downstream is not None:
+            from repro.core.cost import downstream_cost
+
+            cost = downstream_cost(downstream, x.shape[0])
+        prefix_fps: dict[int, str] = {}
+        if self.enable_cache and method_cacheable(method):
+            with self._lock:  # metadata scan only (no hashing under lock)
+                counts = self.cache.prefix_row_counts(
+                    x.shape[0], x.shape[1], cfg.target_tlb, method
+                )
+            prefix_fps = {r: dataset_fingerprint(x[:r]) for r in counts}
         with self._lock:
             if (
                 max_backlog is not None
@@ -198,8 +246,9 @@ class DropService:
             qid = self._next_id
             self._next_id += 1
             self._queue.append(
-                DropQuery(query_id=qid, x=x, cfg=cfg or DropConfig(), cost=cost,
-                          fingerprint=fp)
+                ReduceQuery(query_id=qid, x=x, cfg=cfg, cost=cost,
+                            method=method, downstream=downstream,
+                            fingerprint=fp, prefix_fps=prefix_fps)
             )
             self.stats.queries += 1
         return qid
@@ -221,7 +270,7 @@ class DropService:
         returns the device class's cache, matching the fits on that class)."""
         return self.bucket
 
-    def _validate(self, val: _Validation) -> tuple[bool, DropResult | None]:
+    def _validate(self, val: _Validation) -> tuple[bool, ReduceResult | None]:
         """Revalidate a cached basis on the live data: sampled TLB, no
         fit_basis call anywhere — this is the §5 reuse win. Device compute:
         runs OUTSIDE the scheduler lock, like a runner iteration."""
@@ -258,7 +307,7 @@ class DropService:
             return False, None  # stale (near-repeat drifted): fall to cold
         # runtime_s stays compute-only (matching the cold path's semantics);
         # ServeResult.wall_s carries queue wait + deferral
-        return True, DropResult(
+        return True, ReduceResult(
             v=entry.v,
             mean=entry.mean,
             k=entry.k,
@@ -266,6 +315,7 @@ class DropService:
             satisfied=True,
             runtime_s=time.perf_counter() - tv,
             iterations=[],
+            method=entry.method,
         )
 
     # -------------------------------------------------------- scheduling
@@ -275,26 +325,36 @@ class DropService:
         validation queue (cache hits, revalidated outside the lock).
 
         A query whose dataset is already being fitted or validated in flight
-        is deferred: when the running tenant finishes, its basis lands in
-        the cache and the deferred repeat is served by validation instead of
-        a duplicate cold fit (the §5 reuse case under concurrency). Each
-        admitted query advances the cache TTL clock by one tick, so a TTL
-        counts serving decisions — independent of drain-thread count and of
-        idle polling."""
-        deferred: deque[DropQuery] = deque()
+        (same method) is deferred: when the running tenant finishes, its map
+        lands in the cache and the deferred repeat is served by validation
+        instead of a duplicate cold fit (the §5 reuse case under
+        concurrency). Each admitted query advances the cache TTL clock by
+        one tick, so a TTL counts serving decisions — independent of
+        drain-thread count and of idle polling."""
+        deferred: deque[ReduceQuery] = deque()
         while self._queue and self._inflight_count() < self.max_inflight:
             q = self._queue.popleft()
             if q.t0 is None:
                 q.t0 = time.perf_counter()
             t0, fp = q.t0, q.fingerprint
-            if self.enable_cache and self._fingerprint_inflight(fp):
+            use_cache = self.enable_cache and method_cacheable(q.method)
+            if use_cache and self._fingerprint_inflight(fp, q.method):
                 deferred.append(q)
                 continue
             self.cache.tick()
-            if self.enable_cache:
-                entry = self.cache.get_exact(fp, q.cfg.target_tlb)
+            if use_cache:
+                entry = self.cache.get_exact(fp, q.cfg.target_tlb, q.method)
+                prefix = False
+                if entry is None:
+                    # append-only stream: a cached map fitted on a prefix of
+                    # this dataset (hashed at submit time) is revalidated on
+                    # the grown data instead of refitting cold
+                    entry = self.cache.find_prefix(
+                        q.prefix_fps, q.cfg.target_tlb, q.method
+                    )
+                    prefix = entry is not None
                 if entry is not None:
-                    val = _Validation(q, entry, fp, t0)
+                    val = _Validation(q, entry, fp, t0, prefix=prefix)
                     self._place_validation(val)  # sharded: pick a device
                     self._validations.append(val)
                     continue
@@ -305,18 +365,29 @@ class DropService:
         """Assign a device to a pending validation (no-op on one device;
         the sharded subclass load-balances it like a runner)."""
 
-    def _launch_cold(self, q: DropQuery, fp: str, t0: float) -> None:
-        """Warm-start bookkeeping + runner launch. Caller holds the lock."""
+    def _launch_cold(
+        self,
+        q: ReduceQuery,
+        fp: str,
+        t0: float,
+        fallback_warm_k: int | None = None,
+    ) -> None:
+        """Warm-start bookkeeping + runner launch. ``fallback_warm_k``
+        carries the rank of a prefix-matched entry that failed revalidation
+        (the full-fingerprint lookup cannot see it). Caller holds the lock."""
+        use_cache = self.enable_cache and method_cacheable(q.method)
         warm_k = (
-            self.cache.get_warm_k(fp, q.cfg.target_tlb)
-            if self.enable_cache
+            self.cache.get_warm_k(fp, q.cfg.target_tlb, q.method)
+            if use_cache
             else None
         )
-        # misses count failed lookups, so only when the cache is live;
-        # a warm start is counted as a warm start, not also a miss
+        if warm_k is None:
+            warm_k = fallback_warm_k
+        # misses count failed lookups, so only when the cache could have
+        # served this query; a warm start is a warm start, not also a miss
         if warm_k is not None:
             self.stats.warm_starts += 1
-        elif self.enable_cache:
+        elif use_cache:
             self.stats.cache_misses += 1
         self._launch(q, fp, warm_k, t0)
 
@@ -327,8 +398,11 @@ class DropService:
             + len(self._stepping_now)
         )
 
-    def _fingerprint_inflight(self, fp: str) -> bool:
-        return any(fl.fingerprint == fp for fl in self._iter_inflight())
+    def _fingerprint_inflight(self, fp: str, method: str) -> bool:
+        return any(
+            fl.fingerprint == fp and fl.query.method == method
+            for fl in self._iter_inflight()
+        )
 
     def _iter_inflight(self):
         """All live work: placed runners (the sharded subclass adds
@@ -339,12 +413,14 @@ class DropService:
         yield from self._stepping_now
 
     def _launch(
-        self, q: DropQuery, fp: str, warm_k: int | None, t0: float
+        self, q: ReduceQuery, fp: str, warm_k: int | None, t0: float
     ) -> None:
-        """Build the runner and place it in flight. The sharded subclass
-        overrides this to pick a mesh device and its per-class bucket."""
-        runner = DropRunner(
-            q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=self.bucket
+        """Build the method's Reducer and place it in flight. The sharded
+        subclass overrides this to pick a mesh device and its per-class
+        bucket."""
+        runner = make_reducer(
+            q.method, q.x, q.cfg, q.cost, warm_prev_k=warm_k,
+            bucket=self.bucket,
         )
         self._inflight.append(
             _InFlight(q, runner, fp, warm_started=warm_k is not None, t0=t0)
@@ -360,7 +436,7 @@ class DropService:
             warm_started=fl.warm_started,
             wall_s=time.perf_counter() - fl.t0,
         )
-        if res.satisfied and self.enable_cache:
+        if res.satisfied and self.enable_cache and fl.runner.cacheable:
             self.cache.put(
                 fl.fingerprint,
                 BasisCacheEntry(
@@ -370,6 +446,8 @@ class DropService:
                     target_tlb=fl.query.cfg.target_tlb,
                     tlb_estimate=res.tlb_estimate,
                     satisfied=True,
+                    method=fl.query.method,
+                    rows=fl.query.x.shape[0],
                 ),
             )
 
@@ -381,10 +459,10 @@ class DropService:
             res = fl.runner.result()  # valid once one iteration completed
         except Exception:
             d = fl.query.x.shape[1]
-            res = DropResult(
+            res = ReduceResult(
                 v=np.zeros((d, 0), np.float32), mean=np.zeros(d, np.float32),
                 k=0, tlb_estimate=0.0, satisfied=False, runtime_s=0.0,
-                iterations=list(fl.runner.records),
+                iterations=list(fl.runner.records), method=fl.query.method,
             )
         self.stats.failures += 1
         self.stats.fit_calls += fl.runner.fit_calls
@@ -437,26 +515,58 @@ class DropService:
 
     def _run_validation(self, val: _Validation, done: list[int]) -> None:
         """Execute one revalidation outside the lock and commit the verdict:
-        a pass serves the cached basis, a fail falls through to a cold
-        launch (with warm-start bookkeeping, exactly like a plain miss)."""
+        a pass serves the cached map (a prefix match is additionally
+        re-registered under the grown dataset's fingerprint, so the stream's
+        next append matches again), a fail falls through to a cold launch
+        (with warm-start bookkeeping; a failed prefix entry still seeds the
+        warm rank bound). Verdicts feed the cache's TTL auto-tuner."""
+        errored = False
         try:
             passed, result = self._validate(val)
         except Exception:
-            passed, result = False, None  # a broken entry must not serve
+            # a broken entry must not serve — but an infrastructure error is
+            # NOT a drift observation, so it stays out of the TTL tuner
+            passed, result, errored = False, None, True
         q = val.query
         with self._lock:
             self._stepping_now.remove(val)
+            if not errored:
+                self.cache.note_validation(passed)
+            self.stats.effective_ttl = self.cache.ttl_ticks
             if passed:
                 self.stats.cache_hits += 1
+                if val.prefix:
+                    self.stats.prefix_hits += 1
+                    self.cache.put(
+                        val.fingerprint,
+                        BasisCacheEntry(
+                            v=val.entry.v,
+                            mean=val.entry.mean,
+                            k=val.entry.k,
+                            target_tlb=q.cfg.target_tlb,
+                            tlb_estimate=result.tlb_estimate,
+                            satisfied=True,
+                            method=val.entry.method,
+                            rows=q.x.shape[0],
+                        ),
+                    )
                 self._results[q.query_id] = ServeResult(
                     query_id=q.query_id,
                     result=result,
                     cache_hit=True,
+                    prefix_hit=val.prefix,
                     wall_s=time.perf_counter() - val.t0,
                 )
                 done.append(q.query_id)
             else:
-                self._launch_cold(q, val.fingerprint, val.t0)
+                self._launch_cold(
+                    q, val.fingerprint, val.t0,
+                    fallback_warm_k=(
+                        val.entry.k
+                        if val.prefix and val.entry.satisfied
+                        else None
+                    ),
+                )
 
     def _poll_once(self) -> tuple[bool, bool]:
         """One scheduler tick. Returns (stepped, work_remains)."""

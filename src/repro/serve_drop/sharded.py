@@ -1,9 +1,11 @@
 """Sharded multi-device DROP scheduler.
 
 Extends the single-host ``DropService`` by *placing* each in-flight
-``DropRunner`` on a mesh device (``jax.device_put`` of the runner's PRNG key
-plus a ``jax.default_device`` scope around its steps), so independent
-tenants' iterations execute on independent devices:
+``Reducer`` on a mesh device (``jax.device_put`` of the runner's PRNG key
+plus a ``jax.default_device`` scope around its steps, for the PCA loop;
+the single-shot baseline reducers are host-numpy and placement is pure
+bookkeeping), so independent tenants' iterations execute on independent
+devices:
 
 * **placement** — admission assigns each cold runner to the least-loaded
   device slot; the runner's jitted stages (Halko fit, pairwise TLB) then
@@ -43,7 +45,7 @@ from dataclasses import dataclass, field
 import jax
 
 from repro.core.bucketing import ShapeBucketCache
-from repro.core.drop import DropRunner
+from repro.core.reducer import make_reducer
 from repro.serve_drop.service import DropService, ServeResult, _InFlight
 from repro.sharding.specs import serve_devices
 
@@ -128,8 +130,8 @@ class ShardedDropService(DropService):
         """Admit a cold runner onto the least-loaded device slot."""
         slot = self._least_loaded()
         bucket = self.class_buckets[slot.device.platform]
-        runner = DropRunner(
-            q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=bucket
+        runner = make_reducer(
+            q.method, q.x, q.cfg, q.cost, warm_prev_k=warm_k, bucket=bucket
         )
         runner.place(slot.device)
         fl = _InFlight(

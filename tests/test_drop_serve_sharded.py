@@ -197,20 +197,25 @@ from repro.serve_drop import DropService, ShardedDropService
 assert len(jax.devices()) == 2, jax.devices()
 PARITY_CFG = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
 datasets = [sinusoid_mixture(300, 32, rank=4 + i, seed=10 + i)[0] for i in range(4)]
+# every reducer type must be placement-invariant, not just the PCA loop
+queries = [(x, "pca") for x in datasets] + [
+    (datasets[0], m) for m in ("fft", "paa", "dwt", "jl")
+]
 
 base = DropService(max_inflight=4, enable_cache=False)
-for x in datasets:
-    base.submit(x, PARITY_CFG, zero_cost())
+for x, m in queries:
+    base.submit(x, PARITY_CFG, zero_cost(), method=m)
 ref = base.run()
 
 svc = ShardedDropService(devices=2, max_inflight=4, enable_cache=False)
 assert len(svc.devices) == 2
-for x in datasets:
-    svc.submit(x, PARITY_CFG, zero_cost())
+for x, m in queries:
+    svc.submit(x, PARITY_CFG, zero_cost(), method=m)
 out = svc.run()
 
 bit_identical = all(
     s.result.k == r.result.k
+    and s.result.method == r.result.method
     and np.array_equal(s.result.v, r.result.v)
     and np.array_equal(s.result.mean, r.result.mean)
     and len(s.result.iterations) == len(r.result.iterations)

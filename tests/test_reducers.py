@@ -1,0 +1,147 @@
+"""Reducer protocol contracts: baseline min-k properties (contractivity,
+monotonicity in the target) and bit-for-bit parity between each one-step
+Reducer's result() and the legacy function API it wraps."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import (
+    dwt_min_k,
+    fft_min_k,
+    fft_transform,
+    jl_min_k,
+    jl_transform,
+    paa_min_k,
+    paa_transform,
+)
+from repro.baselines.dwt import dwt_transform, haar_expansion
+from repro.baselines.fft import fft_real_expansion
+from repro.core import DropConfig, drop, make_reducer, reduce
+from repro.core.tlb import nested_prefix_tlb, sample_pairs
+from repro.data import ecg_like, sinusoid_mixture
+
+
+@pytest.fixture(scope="module")
+def ecg():
+    return ecg_like(500, 96, seed=0)[0]
+
+
+# ------------------------------------------------- contractivity properties
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize(
+    "expansion", [fft_real_expansion, haar_expansion], ids=["fft", "dwt"]
+)
+def test_nested_prefix_tlb_is_contractive(expansion, seed):
+    """Every prefix of a nested orthonormal expansion lower-bounds distances:
+    the sampled TLB curve never exceeds 1 and is nondecreasing in k."""
+    x = np.random.default_rng(seed).normal(size=(120, 37)).astype(np.float32)
+    pairs = sample_pairs(x.shape[0], 200, np.random.default_rng(seed + 10))
+    curve = nested_prefix_tlb(x, expansion(x), pairs)
+    assert np.all(curve <= 1.0 + 1e-6)
+    assert np.all(np.diff(curve) >= -1e-9)  # prefixes only add energy
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize(
+    "transform", [fft_transform, paa_transform, dwt_transform],
+    ids=["fft", "paa", "dwt"],
+)
+def test_prefix_transforms_contractive_on_raw_pairs(transform, seed, ecg):
+    """Direct distance check (no TLB machinery): transformed distances never
+    exceed originals for any k, per method."""
+    rng = np.random.default_rng(seed)
+    i = rng.integers(0, ecg.shape[0], 150)
+    j = rng.integers(0, ecg.shape[0], 150)
+    d_hi = np.linalg.norm(ecg[i] - ecg[j], axis=1)
+    for k in (1, 5, 17, 50, ecg.shape[1]):
+        t = transform(ecg, k)
+        d_lo = np.linalg.norm(t[i] - t[j], axis=1)
+        assert np.all(d_lo <= d_hi + 1e-3), (transform, k)
+
+
+@pytest.mark.parametrize(
+    "min_k", [fft_min_k, paa_min_k, dwt_min_k, jl_min_k],
+    ids=["fft", "paa", "dwt", "jl"],
+)
+def test_min_k_monotone_in_target(min_k, ecg):
+    """A tighter TLB target can never need FEWER dimensions."""
+    ks = [min_k(ecg, t) for t in (0.80, 0.90, 0.95, 0.99)]
+    assert ks == sorted(ks), ks
+
+
+# -------------------------------------------------- reducer/legacy parity
+
+
+LEGACY = {
+    "fft": (fft_min_k, fft_transform),
+    "paa": (paa_min_k, paa_transform),
+    "dwt": (dwt_min_k, dwt_transform),
+    "jl": (jl_min_k, jl_transform),
+}
+
+
+@pytest.mark.parametrize("method", sorted(LEGACY))
+@pytest.mark.parametrize("target", [0.90, 0.98])
+def test_single_shot_reducer_matches_legacy(method, target, ecg):
+    """One-step Reducers are the legacy functions behind the protocol:
+    identical seeded pair sample => bit-identical min-k, and the
+    materialized operator reproduces the legacy transform (bit-for-bit for
+    JL, whose operator is drawn rather than computed; float32-roundoff for
+    the FFT/PAA/DWT matrix forms)."""
+    min_k, transform = LEGACY[method]
+    cfg = DropConfig(target_tlb=target, seed=0)
+    runner = make_reducer(method, ecg, cfg)
+    assert runner.step() is False  # single-shot: one step finishes it
+    assert runner.done and runner.fit_calls == 1
+    res = runner.result()
+    assert res.method == method
+    assert res.k == min_k(ecg, target)  # bit-for-bit contract
+    assert len(res.iterations) == 1
+    assert res.iterations[0].pairs_used == cfg.max_pairs
+    got, want = res.transform(ecg), transform(ecg, res.k)
+    if method == "jl":
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_reduce_pca_equals_drop(ecg):
+    """reduce(x, "pca") is drop(): same Algorithm-2 trajectory bit-for-bit
+    (min_iterations pinned past the schedule so Eq. 2 timing noise cannot
+    change the iteration count)."""
+    cfg = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
+    a = reduce(ecg, "pca", cfg)
+    b = drop(ecg, cfg)
+    assert a.method == "pca" and a.k == b.k
+    np.testing.assert_array_equal(a.v, b.v)
+    np.testing.assert_array_equal(a.mean, b.mean)
+
+
+def test_transform_dtype_stable_across_callers(ecg):
+    """The float32 cast-through: a float64 caller sees bit-identical
+    float32 outputs (the satellite dtype-drift fix), for every method."""
+    cfg = DropConfig(target_tlb=0.9, seed=0)
+    for method in ("pca", "fft", "paa", "dwt", "jl"):
+        res = reduce(ecg, method, cfg)
+        out32 = res.transform(ecg.astype(np.float32))
+        out64 = res.transform(ecg.astype(np.float64))
+        assert out32.dtype == np.float32 and out64.dtype == np.float32
+        np.testing.assert_array_equal(out32, out64)
+
+
+def test_make_reducer_rejects_unknown_method(ecg):
+    with pytest.raises(KeyError, match="unknown reduction method"):
+        make_reducer("tsne", ecg)
+
+
+def test_reducers_satisfy_on_structured_data():
+    """On low-rank data every contractive method eventually satisfies, and
+    PCA needs the fewest dims (the paper's headline, via the new API)."""
+    x, _ = sinusoid_mixture(600, 128, rank=4, seed=3)
+    cfg = DropConfig(target_tlb=0.95, seed=0)
+    ks = {m: reduce(x, m, cfg) for m in ("pca", "fft", "paa", "dwt")}
+    for m, r in ks.items():
+        assert r.satisfied, m
+    assert ks["pca"].k <= min(ks["fft"].k, ks["paa"].k, ks["dwt"].k)

@@ -1,0 +1,251 @@
+"""Method-agnostic serving: FFT/PAA/DWT/JL queries scheduled and cached
+like DROP, method-keyed cache isolation, append-only prefix-fingerprint
+reuse, and TTL auto-tuning."""
+
+import numpy as np
+import pytest
+
+from repro.core import DropConfig
+from repro.core.cost import zero_cost
+from repro.serve_drop import (
+    BasisReuseCache,
+    DropService,
+    IngestFrontend,
+    ShardedDropService,
+)
+from repro.serve_drop.cache import BasisCacheEntry
+from repro.data import sinusoid_mixture
+
+CFG = DropConfig(target_tlb=0.95, seed=0)
+PARITY_CFG = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
+
+
+def _data(rows=400, dim=48, rank=5, seed=11):
+    return sinusoid_mixture(rows, dim, rank=rank, seed=seed)[0]
+
+
+# -------------------------------------------------- multi-method serving
+
+
+def test_baseline_methods_served_and_cached():
+    """FFT/PAA queries flow through the same scheduler and basis cache as
+    DROP: cold fit once, then validated cache hits with zero fitting."""
+    x = _data()
+    svc = DropService()
+    for m in ("fft", "paa", "fft", "paa"):
+        svc.submit(x, CFG, zero_cost(), method=m)
+    out = svc.run()
+    assert [r.result.method for r in out] == ["fft", "paa", "fft", "paa"]
+    assert [r.cache_hit for r in out] == [False, False, True, True]
+    assert out[0].result.k == out[2].result.k
+    np.testing.assert_array_equal(out[0].result.v, out[2].result.v)
+    assert svc.stats.cache_hits == 2 and svc.stats.fit_calls == 2
+
+
+def test_cache_keyed_by_method():
+    """A cached FFT map must never serve a PCA query on the same data (and
+    vice versa): the key is fingerprint x method x target."""
+    x = _data()
+    svc = DropService()
+    svc.submit(x, CFG, zero_cost(), method="fft")
+    first = svc.run()[0]
+    assert first.result.satisfied
+    svc.submit(x, CFG, zero_cost(), method="pca")
+    second = svc.run()[0]
+    assert not second.cache_hit and second.result.method == "pca"
+    assert second.result.k != first.result.k or not np.array_equal(
+        second.result.v, first.result.v
+    )
+    # both entries coexist; each method hits its own
+    for m in ("fft", "pca"):
+        svc.submit(x, CFG, zero_cost(), method=m)
+    assert all(r.cache_hit for r in svc.run())
+
+
+def test_same_data_different_methods_not_deferred():
+    """In-flight dedup is per (fingerprint, method): concurrent queries on
+    the same data with different methods both run cold."""
+    x = _data(rows=250, dim=32)
+    svc = DropService(max_inflight=4)
+    svc.submit(x, CFG, zero_cost(), method="fft")
+    svc.submit(x, CFG, zero_cost(), method="dwt")
+    out = svc.run()
+    assert not any(r.cache_hit for r in out)
+    assert svc.stats.fit_calls == 2
+
+
+def test_ingest_frontend_serves_and_caches_baselines():
+    """Acceptance: FFT and PAA queries are servable through IngestFrontend
+    and cacheable in BasisReuseCache."""
+    x = _data()
+    svc = DropService()
+    with IngestFrontend(svc, queue_capacity=8) as fe:
+        cold = [fe.submit(x, CFG, zero_cost(), method=m) for m in ("fft", "paa")]
+        cold_res = [fe.result(q, timeout=120) for q in cold]
+        warm = [fe.submit(x, CFG, zero_cost(), method=m) for m in ("fft", "paa")]
+        warm_res = [fe.result(q, timeout=120) for q in warm]
+    assert [r.result.method for r in cold_res] == ["fft", "paa"]
+    assert not any(r.cache_hit for r in cold_res)
+    assert all(r.cache_hit for r in warm_res)
+    for c, w in zip(cold_res, warm_res):
+        assert c.result.k == w.result.k
+        np.testing.assert_array_equal(c.result.v, w.result.v)
+
+
+def test_sharded_single_device_parity_every_method():
+    """Acceptance: sharded-vs-single per-query results bit-identical for
+    every reducer type (the in-process leg; the forced 2-device leg lives in
+    test_drop_serve_sharded's slow subprocess test)."""
+    x = _data(rows=300, dim=32, rank=4, seed=10)
+    methods = ("pca", "fft", "paa", "dwt", "jl")
+    base = DropService(max_inflight=5, enable_cache=False)
+    shard = ShardedDropService(devices=1, max_inflight=5, enable_cache=False)
+    for m in methods:
+        base.submit(x, PARITY_CFG, zero_cost(), method=m)
+        shard.submit(x, PARITY_CFG, zero_cost(), method=m)
+    for r, s in zip(base.run(), shard.run()):
+        assert (r.result.method, r.result.k) == (s.result.method, s.result.k)
+        np.testing.assert_array_equal(r.result.v, s.result.v)
+        np.testing.assert_array_equal(r.result.mean, s.result.mean)
+
+
+def test_jl_not_cached_and_never_poisons_ttl():
+    """JL is data-independent (operator derivable from d/k/seed) and not
+    contractive, so its results are never cached — a repeat runs cold
+    instead of looping validation-fail -> refit, and the auto-TTL never
+    sees a JL 'drift' verdict."""
+    x = _data()
+    svc = DropService(cache_ttl=8, cache_ttl_auto=True)
+    for _ in range(2):
+        svc.submit(x, DropConfig(target_tlb=0.98, seed=0), zero_cost(),
+                   method="jl")
+    out = svc.run()
+    assert not any(r.cache_hit for r in out)
+    assert out[0].result.k == out[1].result.k
+    assert len(svc.cache) == 0  # nothing inserted
+    assert svc.cache.validation_failures == 0
+    assert svc.stats.effective_ttl == 8  # untouched by the repeats
+    assert svc.stats.cache_misses == 0  # the cache was never in play
+
+
+# ------------------------------------------------ prefix fingerprinting
+
+
+def test_appended_rows_served_via_prefix_hit():
+    """Append-only stream: growing a cached dataset hits via the prefix
+    fingerprint, revalidates on the full grown data, and re-registers under
+    the new fingerprint so the NEXT append's prefix matches again."""
+    x = _data(rows=500)
+    svc = DropService()
+    svc.submit(x, CFG, zero_cost())
+    first = svc.run()[0]
+    assert first.result.satisfied and not first.cache_hit
+    fits_after_cold = svc.stats.fit_calls
+
+    rng = np.random.default_rng(0)
+    noise = 0.01 * rng.normal(size=(60, x.shape[1]))
+    grown = np.concatenate(  # same process: new rows from the same subspace
+        [x, x[rng.integers(0, 500, 60)] + noise.astype(np.float32)]
+    ).astype(np.float32)
+    svc.submit(grown, CFG, zero_cost())
+    r = svc.run()[0]
+    assert r.cache_hit and r.prefix_hit
+    assert r.result.k == first.result.k
+    assert svc.stats.prefix_hits == 1
+    assert svc.stats.fit_calls == fits_after_cold  # no refit anywhere
+
+    grown2 = np.concatenate([grown, grown[:10]]).astype(np.float32)
+    svc.submit(grown2, CFG, zero_cost())
+    r2 = svc.run()[0]
+    assert r2.cache_hit and r2.prefix_hit  # matched the re-registered entry
+    assert svc.stats.prefix_hits == 2
+    assert svc.stats.fit_calls == fits_after_cold
+
+
+def test_drifted_suffix_fails_prefix_validation_and_warm_starts():
+    """A grown dataset whose appended rows broke the subspace must NOT be
+    served from the prefix entry: revalidation on the suffix-bearing data
+    fails, and the cold refit warm-starts from the prefix entry's rank."""
+    x = _data(rows=500, rank=3)
+    svc = DropService()
+    cfg = DropConfig(target_tlb=0.95, seed=0)
+    svc.submit(x, cfg, zero_cost())
+    first = svc.run()[0]
+    assert first.result.satisfied and first.result.k <= 6
+
+    rng = np.random.default_rng(1)
+    grown = np.concatenate(
+        [x, rng.normal(size=(400, x.shape[1])).astype(np.float32)]
+    ).astype(np.float32)  # 400 white-noise rows: old basis can't cover them
+    svc.submit(grown, cfg, zero_cost())
+    r = svc.run()[0]
+    assert not r.cache_hit and not r.prefix_hit
+    assert r.warm_started  # the failed prefix entry still seeded the rank
+    assert r.result.satisfied and r.result.k > first.result.k
+    assert svc.cache.validation_failures == 1
+
+
+def test_prefix_requires_method_and_shape_match():
+    """A prefix entry of a different method or width never matches."""
+    x = _data(rows=500)
+    svc = DropService()
+    svc.submit(x, CFG, zero_cost(), method="fft")
+    svc.run()
+    grown = np.concatenate([x, x[:30]]).astype(np.float32)
+    svc.submit(grown, CFG, zero_cost(), method="pca")  # different method
+    r = svc.run()[0]
+    assert not r.cache_hit and not r.prefix_hit
+
+
+# ------------------------------------------------------ TTL auto-tuning
+
+
+def test_cache_ttl_auto_tunes_on_verdicts():
+    cache = BasisReuseCache(capacity=4, ttl_ticks=8, auto_ttl=True)
+    assert cache.ttl_ticks == 8
+    cache.note_validation(False)
+    assert cache.ttl_ticks == 4  # observed drift: shrink
+    cache.note_validation(False)
+    cache.note_validation(False)
+    cache.note_validation(False)
+    assert cache.ttl_ticks == 1  # floored, never zero
+    for _ in range(4):
+        cache.note_validation(True)
+    assert cache.ttl_ticks == 2  # sustained validated hits: grow back
+    for _ in range(8):
+        cache.note_validation(True)
+    assert cache.ttl_ticks == 8  # capped at the configured budget
+    for _ in range(4):
+        cache.note_validation(True)
+    assert cache.ttl_ticks == 8
+    assert cache.validation_failures == 4
+
+    fixed = BasisReuseCache(capacity=4, ttl_ticks=8, auto_ttl=False)
+    fixed.note_validation(False)
+    assert fixed.ttl_ticks == 8  # opt-in only
+    assert fixed.validation_failures == 1
+
+
+def test_service_exposes_effective_ttl():
+    """A failing revalidation shrinks the live TTL (visible in
+    ServiceStats.effective_ttl); validated hits grow it back."""
+    x = _data()
+    svc = DropService(cache_ttl=8, cache_ttl_auto=True)
+    assert svc.stats.effective_ttl == 8
+    svc.submit(x, CFG, zero_cost())
+    k_good = svc.run()[0].result.k
+    assert k_good > 1
+
+    # degrade the cached entry so the next revalidation honestly fails
+    ((key, entry),) = [(k, svc.cache._entries[k]) for k in svc.cache.keys()]
+    entry.v = entry.v[:, :1]
+    entry.k = 1
+    svc.submit(x, CFG, zero_cost())
+    healed = svc.run()[0]
+    assert not healed.cache_hit and healed.result.k == k_good
+    assert svc.stats.effective_ttl == 4  # drift halved the TTL
+
+    for _ in range(4):  # fresh entry now validates: TTL earns its way back
+        svc.submit(x, CFG, zero_cost())
+        assert svc.run()[0].cache_hit
+    assert svc.stats.effective_ttl == 8
