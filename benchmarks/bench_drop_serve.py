@@ -100,7 +100,11 @@ def _scale_worker_main(argv: list[str]) -> None:
         qids = {svc.submit(x, cfg, zero_cost()): i for i, x, cfg in datasets}
         return {qids[r.query_id]: r.result.k for r in svc.run()}
 
-    drain()  # warm: compiles land here, outside the parent's clock
+    from benchmarks.harness import warm
+
+    # two warm drains (harness convention for DROP's adaptive schedule):
+    # compiles land here, outside the parent's clock
+    warm(drain)
     print("READY", flush=True)
     sys.stdin.readline()  # GO
     # best-of-3 (harness convention): all workers keep draining concurrently,
@@ -178,7 +182,7 @@ def scaling_rows(max_devices: int = 2, tenants: int = 6) -> list:
 
 
 def run(full: bool = False) -> list:
-    from benchmarks.harness import Row, timed
+    from benchmarks.harness import Row, timed, warm
     from repro.core import DropConfig, drop
     from repro.core.cost import knn_cost
     from repro.data import sinusoid_mixture
@@ -203,13 +207,15 @@ def run(full: bool = False) -> list:
         svc.run()
         return svc
 
-    # warmup=1 runs each side once un-timed (harness convention: timing
-    # excludes jit compilation), so the comparison isolates basis reuse —
-    # each timed _serve() builds a FRESH service, so its cache starts cold
-    t_seq, _ = timed(
-        lambda: [drop(x, cfg, cost=cost) for x in datasets], warmup=1
-    )
-    t_srv, svc = timed(_serve, warmup=1)
+    # two warm runs per side un-timed (harness convention: DROP's adaptive
+    # schedule needs two to pin its compiled-shape set), so the comparison
+    # isolates basis reuse — each timed _serve() builds a FRESH service, so
+    # its cache starts cold
+    seq = lambda: [drop(x, cfg, cost=cost) for x in datasets]  # noqa: E731
+    warm(seq)
+    t_seq, _ = timed(seq, warmup=0)
+    warm(_serve)
+    t_srv, svc = timed(_serve, warmup=0)
 
     speedup = t_seq / t_srv
     out = [

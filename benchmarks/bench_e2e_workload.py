@@ -52,13 +52,16 @@ def measure(
     cost = downstream_cost(downstream, rows)
 
     # warm every method's DR path AND the downstream kernel at its k (the
-    # analytics kernels compile per reduced shape). DROP's progressive
-    # schedule is runtime-adaptive, so two throwaway runs stabilize its
-    # compiled-shape set (same convention as examples/quickstart.py).
+    # analytics kernels compile per reduced shape). DROP's wall-clock-
+    # adaptive schedule needs the harness's two warm runs; the single-shot
+    # baselines stabilize in one.
+    from benchmarks.harness import warm
+
     for m in methods:
-        res = reduce(x, m, cfg, cost)
-        if m == "pca":
-            res = reduce(x, m, cfg, cost)
+        res = warm(
+            lambda m=m: reduce(x, m, cfg, cost),
+            runs=2 if m == "pca" else 1,
+        )
         run_downstream(downstream, res.transform(x))
 
     opt = WorkloadOptimizer(methods=methods, cfg=cfg)

@@ -37,6 +37,21 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 1, **kw):
     return best, out
 
 
+def warm(fn: Callable, runs: int = 2):
+    """Run ``fn`` un-timed ``runs`` times; returns the last result.
+
+    TWO warm runs are the repo convention for DROP paths (quickstart.py
+    documents it): the progressive schedule terminates on wall-clock, so the
+    first run's compile stalls change WHICH iterations execute — and with
+    them the compiled-shape set. Only a second, compile-free run pins the
+    shapes the timed run will see. One run suffices for the deterministic
+    single-shot baselines (pass ``runs=1``)."""
+    out = None
+    for _ in range(max(int(runs), 1)):
+        out = fn()
+    return out
+
+
 def suite(full: bool, n_small: int = 6):
     """UCR-like datasets for benchmarks: a subset by default, all when --full.
     Rows capped on the small path so the whole suite stays CI-sized."""

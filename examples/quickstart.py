@@ -91,17 +91,25 @@ def optimizer_demo(x, cfg) -> None:
 def serve_demo(x, cfg) -> None:
     """Multi-query serving (paper §5 reuse): repeat workloads are served
     from the basis cache after one cold fit — no re-fitting, just a sampled
-    TLB revalidation. Full CLI: python -m repro.launch.drop_serve"""
+    TLB revalidation. An append-only grown dataset is folded in by an
+    O(suffix) incremental subspace update instead of any refit.
+    Full CLI: python -m repro.launch.drop_serve (--grow-steps N for the
+    append-stream demo)"""
     from repro.serve_drop import DropService
 
-    print("\nDropService: 4 submissions of the same workload")
-    svc = DropService()
+    print("\nDropService: 4 submissions of the same workload + 1 append")
+    svc = DropService(suffix_budget=0.0)  # appends go straight to the update
     cost = knn_cost(x.shape[0])  # C_m for the rows actually served
     for _ in range(4):
         svc.submit(x, cfg, cost)
-    for r in svc.run():
-        tag = "cache-hit" if r.cache_hit else "cold"
-        print(f"  q{r.query_id}  [{tag:9s}]  k={r.result.k:3d}  "
+    grown = np.concatenate([x, x[: max(1, x.shape[0] // 20)]])  # +5% rows
+    results = svc.run()
+    svc.submit(np.ascontiguousarray(grown), cfg, cost)
+    results += svc.run()
+    for r in results:
+        tag = ("suffix-upd" if r.suffix_update
+               else "cache-hit" if r.cache_hit else "cold")
+        print(f"  q{r.query_id}  [{tag:10s}]  k={r.result.k:3d}  "
               f"tlb={r.result.tlb_estimate:.4f}  wall={r.wall_s*1e3:7.1f} ms")
     print(f"  stats: {svc.stats.as_dict()}")
 

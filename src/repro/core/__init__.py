@@ -13,6 +13,11 @@ from repro.core.reducer import (  # noqa: F401
     make_reducer,
     reduce,
 )
+from repro.core.subspace import (  # noqa: F401
+    TRACK_HEADROOM,
+    SubspaceTracker,
+    suffix_update,
+)
 from repro.core.types import (  # noqa: F401
     DEFAULT_SCHEDULE,
     DropConfig,

@@ -97,6 +97,21 @@ class ShapeBucketCache:
         """Padded row count for a TLB pair batch of ``p`` pairs."""
         return self._record("pairs", round_up(p, self.pair_quantum))
 
+    def pad_basis(self, v, hard_cap: int):
+        """Zero-pad a (d, k) basis to its rank bucket so jitted TLB stages
+        keep the bucketed shapes of the fit path — zero columns never change
+        the table entries a search or validation reads. ``hard_cap`` mirrors
+        the fit path's min(m, d) cap, so fit / validation / suffix-update
+        shapes coincide (one compiled executable per bucket)."""
+        import numpy as np  # local: keep the module import-light
+
+        pad_w = self.bucket_rank(v.shape[1], hard_cap)
+        if pad_w <= v.shape[1]:
+            return v
+        return np.concatenate(
+            [v, np.zeros((v.shape[0], pad_w - v.shape[1]), v.dtype)], axis=1
+        )
+
     def bucket_rows(self, n: int) -> int:
         """Padded sample-row count for the PCA fit (masked centering keeps the
         zero rows out of the mean; zero rows never change right singular

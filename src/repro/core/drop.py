@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import progress as progress_mod
 from repro.core import sampling as sampling_mod
+from repro.core import subspace as subspace_mod
 from repro.core.basis_search import compute_basis
 from repro.core.bucketing import ShapeBucketCache
 from repro.core.types import CostFn, DropConfig, DropResult, IterationRecord
@@ -50,6 +51,7 @@ class PcaDropReducer:
 
     method = "pca"
     cacheable = True  # a fitted basis is exactly what the §5 cache amortizes
+    supports_update = True  # appended rows fold in via subspace tracking
 
     def __init__(
         self,
@@ -86,6 +88,7 @@ class PcaDropReducer:
         self.done = False
         self._clock = Clock()
         self.device = None  # mesh device this runner is pinned to (optional)
+        self._tracker: subspace_mod.SubspaceTracker | None = None
 
     def place(self, device) -> None:
         """Pin this runner's compute to ``device`` (serve-layer sharding).
@@ -148,6 +151,13 @@ class PcaDropReducer:
             self._best = {
                 "rank": rank,
                 "v": res.v_full[:, : res.k],
+                # wider slice for subspace tracking: near-degenerate trailing
+                # directions dropped from the served map still carry old-row
+                # energy a future suffix merge needs (the suffix alone cannot
+                # reconstruct it)
+                "v_track": res.v_full[
+                    :, : res.k + subspace_mod.TRACK_HEADROOM
+                ],
                 "mean": res.mean,
                 "k": res.k,
                 "tlb": res.tlb_mean,
@@ -190,6 +200,61 @@ class PcaDropReducer:
             iterations=self.records,
             method=self.method,
         )
+
+    def tracker(self) -> subspace_mod.SubspaceTracker:
+        """Subspace-updater state for the best basis found so far (the
+        serve-layer cache stores this next to the fitted map so appended
+        rows can be folded in without a refit)."""
+        assert self._best is not None, "tracker() before any step()"
+        if self._tracker is None:
+            self._tracker = subspace_mod.SubspaceTracker.from_fit(
+                self.x, np.asarray(self._best["v_track"])
+            )
+        return self._tracker
+
+    def update(self, suffix: np.ndarray) -> DropResult:
+        """Fold appended rows into the fitted basis instead of refitting
+        (Reducer protocol's optional incremental path): a mean-aware block
+        incremental SVD merge of the suffix, TLB-gated on the grown data.
+        O(suffix), not O(total) — the rows already folded in are never
+        touched. ``result().satisfied`` False after an update means the
+        suffix outgrew the tracked headroom; callers should refit."""
+        assert self._best is not None, "update() before any step()"
+        suffix = np.ascontiguousarray(np.asarray(suffix), dtype=np.float32)
+        grown = np.concatenate([self.x, suffix], axis=0)
+        tracker = self.tracker()
+        self._tracker, res, pairs = subspace_mod.suffix_update(
+            tracker, grown, self.cfg, bucket=self.bucket
+        )
+        self.x = grown
+        self.total_runtime += res.runtime_s
+        self.records.append(
+            IterationRecord(
+                i=len(self.records),
+                sample_size=suffix.shape[0],  # only the suffix is processed
+                k=res.k,
+                tlb_estimate=res.tlb_estimate,
+                runtime_s=res.runtime_s,
+                objective=self.total_runtime + self.cost(res.k),
+                satisfied=res.satisfied,
+                pairs_used=pairs,
+            )
+        )
+        rank = (
+            (0, res.k, -res.tlb_estimate)
+            if res.satisfied
+            else (1, -res.tlb_estimate, res.k)
+        )
+        self._best = {
+            "rank": rank,
+            "v": res.v,
+            "v_track": self._tracker.v,  # merged state carries the headroom
+            "mean": res.mean,
+            "k": res.k,
+            "tlb": res.tlb_estimate,
+            "satisfied": res.satisfied,
+        }
+        return self.result()
 
 
 DropRunner = PcaDropReducer  # deprecated alias (pre-Reducer-protocol name)

@@ -14,6 +14,11 @@ runner with the same three verbs the serving stack schedules:
   cache entry shape, one validation path) serves them all.
 * ``place(device)`` — pin the reducer's compute to a mesh device (the
   sharded scheduler migrates reducers between steps).
+* ``update(suffix)`` — OPTIONAL incremental path (``supports_update``
+  advertises it): fold appended rows into the fitted map without a refit.
+  ``PcaDropReducer`` implements it via ``core.subspace`` tracking; the
+  single-shot baselines keep refit semantics and raise
+  ``NotImplementedError`` (their fits are cheap and non-incremental).
 
 ``make_reducer`` is the factory the serving layer uses; ``reduce`` drives
 any method to completion for one-shot callers (the generalization of the
@@ -41,12 +46,15 @@ class Reducer(Protocol):
     fit_calls: int
     records: list
     cacheable: bool  # may result() be served from the basis-reuse cache?
+    supports_update: bool  # does update(suffix) avoid a refit?
 
     def step(self) -> bool: ...
 
     def result(self) -> ReduceResult: ...
 
     def place(self, device) -> None: ...
+
+    def update(self, suffix: np.ndarray) -> ReduceResult: ...
 
 
 def method_operator(method: str, d: int, k: int, seed: int = 0) -> np.ndarray:
@@ -92,6 +100,7 @@ class SingleShotReducer:
 
     method = ""
     cacheable = True
+    supports_update = False  # one-shot fits keep refit semantics
 
     def __init__(
         self,
@@ -169,6 +178,14 @@ class SingleShotReducer:
     def result(self) -> ReduceResult:
         assert self._result is not None, "result() before any step()"
         return self._result
+
+    def update(self, suffix: np.ndarray) -> ReduceResult:
+        """Single-shot methods keep refit semantics: their whole fit is one
+        cheap step, so an incremental path has nothing to amortize."""
+        raise NotImplementedError(
+            f"{type(self).__name__} keeps refit semantics: appended rows "
+            "require a fresh fit (supports_update=False)"
+        )
 
 
 class FftReducer(SingleShotReducer):

@@ -13,7 +13,11 @@ shape-bucket population. ``--method`` picks the Reducer per query (a comma
 list cycles across the workload — FFT/PAA queries are scheduled and cached
 exactly like DROP); ``--downstream`` prices the named analytics task as the
 cost model. ``--compare-sequential`` also times cold ``reduce()`` per query
-for a direct speedup figure.
+for a direct speedup figure. ``--grow-steps N`` switches to the append-only
+demo: one tenant's dataset grows by ``--grow-frac`` rows per step and each
+snapshot climbs the escalation ladder (prefix hit -> incremental suffix
+update -> cold refit as last resort; tune with ``--suffix-budget`` /
+``--no-suffix-update``).
 """
 
 from __future__ import annotations
@@ -80,6 +84,38 @@ def build_workload(
     return [pool[i % n_datasets] for i in range(n_queries)]
 
 
+def _serve_append_stream(svc, args, method, cfg, cost) -> None:
+    """--grow-steps demo: one tenant's dataset grows by --grow-frac rows per
+    step; each snapshot is submitted AFTER the previous one finished (prefix
+    fingerprints are hashed at submit time against the live cache), so the
+    stream exercises the escalation ladder: prefix hit -> suffix update ->
+    cold refit as last resort. Non-PCA methods carry no updater state, so
+    their ladder tops out at revalidate-or-refit."""
+    append = max(1, int(args.rows * args.grow_frac))
+    m_total = args.rows + args.grow_steps * append
+    x_full = sinusoid_mixture(m_total, args.dim, rank=5, seed=args.seed)[0]
+    reduce(x_full[: args.rows], method, cfg, cost)  # jit warm (convention)
+    print(f"append stream [{method}]: m0={args.rows} +{append} rows x "
+          f"{args.grow_steps} steps (suffix budget {args.suffix_budget})")
+    t0 = time.perf_counter()
+    for i in range(args.grow_steps + 1):
+        snap = x_full[: args.rows + i * append]
+        ts = time.perf_counter()
+        svc.submit(snap, cfg, cost, method=method)
+        r = svc.run()[0]
+        tag = ("SUFX" if r.suffix_update else "HIT " if r.cache_hit
+               else "WARM" if r.warm_started else "COLD")
+        print(f"  step {i:02d} [{tag}] rows={snap.shape[0]:6d} "
+              f"k={r.result.k:3d} tlb={r.result.tlb_estimate:.4f} "
+              f"wall={(time.perf_counter() - ts) * 1e3:7.1f} ms")
+    dt = time.perf_counter() - t0
+    print(f"stream served in {dt*1e3:.0f} ms; cache: "
+          f"{svc.stats.prefix_hits} prefix hits, "
+          f"{svc.stats.suffix_updates} suffix updates "
+          f"({svc.stats.suffix_update_failures} fell through), "
+          f"{svc.stats.fit_calls} basis fits")
+
+
 def _submit_async(fe: IngestFrontend, datasets, methods, cfg, cost) -> list[int]:
     """Stream submissions through the bounded ingest queue, honoring
     reject-with-retry-after backpressure."""
@@ -112,6 +148,20 @@ def main() -> None:
     ap.add_argument("--cache-entries", type=int, default=16)
     ap.add_argument("--cache-ttl", type=int, default=None,
                     help="basis-cache TTL in scheduler ticks (default: none)")
+    ap.add_argument("--suffix-budget", type=float, default=0.25,
+                    help="append-only drift budget: a prefix-matched suffix "
+                         "larger than this fraction of the fitted rows skips "
+                         "revalidation and goes straight to the incremental "
+                         "subspace update")
+    ap.add_argument("--no-suffix-update", action="store_true",
+                    help="disable incremental suffix updates (failed prefix "
+                         "revalidations refit cold, the pre-tracking behavior)")
+    ap.add_argument("--grow-steps", type=int, default=0,
+                    help="append-stream demo: serve the base dataset, then "
+                         "this many grown snapshots (each +grow-frac rows) "
+                         "sequentially through the escalation ladder")
+    ap.add_argument("--grow-frac", type=float, default=0.05,
+                    help="per-append row growth for --grow-steps")
     ap.add_argument("--devices", type=int, default=1,
                     help="mesh devices for the sharded scheduler (>1 forces "
                          "the host-platform device count on CPU)")
@@ -144,6 +194,8 @@ def main() -> None:
             cache_entries=args.cache_entries,
             enable_cache=not args.no_cache,
             cache_ttl=args.cache_ttl,
+            enable_suffix_update=not args.no_suffix_update,
+            suffix_budget=args.suffix_budget,
         )
         print(f"sharded scheduler over {len(svc.devices)} devices: "
               f"{[str(d) for d in svc.devices]}")
@@ -153,7 +205,19 @@ def main() -> None:
             cache_entries=args.cache_entries,
             enable_cache=not args.no_cache,
             cache_ttl=args.cache_ttl,
+            enable_suffix_update=not args.no_suffix_update,
+            suffix_budget=args.suffix_budget,
         )
+    if args.grow_steps > 0:
+        if args.use_async:
+            ap.error("--grow-steps is sequential by design (prefix matching "
+                     "is submit-time); drop --async")
+        if len(set(methods)) > 1:
+            ap.error("--grow-steps serves ONE growing tenant; give a single "
+                     "--method")
+        _serve_append_stream(svc, args, methods[0], cfg, cost)
+        return
+
     # warm the jit caches with one cold reduce() per distinct (dataset,
     # method) pair so the reported throughput measures serving, not XLA
     # compilation (plain reduce() shares the shape buckets but never touches
@@ -181,6 +245,7 @@ def main() -> None:
           f"({qps:.2f} queries/sec, {mode})")
     print(f"cache: {hits}/{args.queries} hits, "
           f"{svc.stats.warm_starts} warm starts, "
+          f"{svc.stats.suffix_updates} suffix updates, "
           f"{svc.stats.fit_calls} basis fits, "
           f"{len(svc.cache)} entries resident, "
           f"{svc.stats.rejected} backpressure rejections")
@@ -192,7 +257,8 @@ def main() -> None:
               f"steals={svc.stats.steals}")
     print(f"buckets: {svc.bucket.summary()}")
     for r in results:
-        tag = "HIT " if r.cache_hit else ("WARM" if r.warm_started else "COLD")
+        tag = ("SUFX" if r.suffix_update else "HIT " if r.cache_hit
+               else "WARM" if r.warm_started else "COLD")
         print(f"  q{r.query_id:02d} [{tag}] {r.result.method:3s} "
               f"k={r.result.k:3d} tlb={r.result.tlb_estimate:.4f} "
               f"wall={r.wall_s*1e3:7.1f} ms")

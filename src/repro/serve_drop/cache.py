@@ -18,7 +18,12 @@ Entries are keyed by (dataset fingerprint, method, quantized TLB target):
   misses on its full fingerprint, but if a cached entry's row count marks a
   prefix whose fingerprint matches, the cached map is revalidated on the
   FULL grown data (suffix included) instead of refitting cold. A pass
-  serves the entry and re-registers it under the grown fingerprint.
+  serves the entry and re-registers it under the grown fingerprint. PCA
+  entries additionally carry ``tracker`` — ``core.subspace`` updater state
+  (basis + singular values + running mean) — so a FAILED prefix
+  revalidation, or a suffix past the service's drift budget, escalates to
+  an O(suffix) incremental subspace update instead of a cold refit (the
+  refit is the last resort, not the default; see ``DropService``).
 * **warm hit** — same data/method but no reusable entry: a cold PCA run
   still starts with ``prev_k`` seeded from the smallest cached satisfying k
   fitted at a target >= the request's. Entries fitted at looser targets are
@@ -95,6 +100,11 @@ class BasisCacheEntry:
     method: str = "pca"
     rows: int = 0  # fitted dataset's row count (prefix matching key)
     born_tick: int = 0  # stamped by put(); age = cache clock - born_tick
+    # core.subspace.SubspaceTracker updater state (None for methods without
+    # an incremental path): what lets the serving layer fold an appended
+    # suffix into this map instead of refitting cold. tracker.rows must
+    # equal ``rows`` — the suffix of a grown dataset is sliced from it.
+    tracker: object | None = None
 
 
 class BasisReuseCache:

@@ -11,6 +11,14 @@ drives them through the shared device:
   at all); an append-only stream whose PREFIX fingerprint matches a cached
   entry revalidates that entry on the grown data; a warm hit seeds the
   §3.4.3 rank bound of a cold PCA run; a miss runs cold.
+* **suffix escalation** — a prefix-matched PCA entry that FAILS
+  revalidation, or whose suffix exceeds ``suffix_budget`` (as a fraction
+  of the fitted rows), is repaired by a ``_SuffixUpdate`` work item: an
+  O(suffix) incremental subspace merge (``core.subspace``) TLB-gated on
+  the grown data. Only when even the updated map cannot clear the target
+  does the query fall to a cold refit — the service's most expensive
+  operation becomes the last resort on append-only streams, not the
+  default drift response.
 * **scheduling** — cold runs are ``Reducer`` state machines built by
   ``make_reducer`` (DROP's multi-step Algorithm-2 loop for PCA; one-step
   runners for the deterministic baselines); the scheduler round-robins
@@ -50,6 +58,7 @@ import numpy as np
 
 from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache
 from repro.core.reducer import Reducer, make_reducer, method_cacheable
+from repro.core.subspace import suffix_update as subspace_suffix_update
 from repro.core.tlb import TLBEstimator
 from repro.core.types import CostFn, DropConfig, ReduceResult
 from repro.serve_drop.cache import (
@@ -89,6 +98,7 @@ class ServeResult:
     cache_hit: bool = False  # served straight from the basis cache
     prefix_hit: bool = False  # cache hit via append-only prefix fingerprint
     warm_started: bool = False  # cold run, but rank bound seeded from cache
+    suffix_update: bool = False  # served by an incremental subspace update
     wall_s: float = 0.0
     error: str | None = None  # set when the query's runner raised mid-flight
 
@@ -103,6 +113,8 @@ class ServiceStats:
     fit_calls: int = 0
     iterations: int = 0
     validation_pairs: int = 0
+    suffix_updates: int = 0  # queries served by an incremental merge
+    suffix_update_failures: int = 0  # updates that fell through (or raised)
     failures: int = 0  # queries finished with ServeResult.error set
     rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
     steals: int = 0  # runners migrated to an idle device between rounds
@@ -139,6 +151,22 @@ class _Validation:
     prefix: bool = False  # entry matched via prefix fingerprint (append)
 
 
+@dataclass(eq=False)
+class _SuffixUpdate:
+    """A pending incremental subspace update for an append-only stream:
+    merge the suffix into the cached updater state and TLB-gate the result
+    on the grown data. Device compute, scheduled exactly like a
+    ``_Validation`` (off-lock, fingerprint visible to dedup); a failed gate
+    falls through to the cold-refit path, a raising update finishes the
+    query with ``ServeResult.error`` instead of wedging the drain."""
+
+    query: ReduceQuery
+    entry: BasisCacheEntry
+    fingerprint: str
+    t0: float
+    device: object = None  # mesh device to update on (sharded)
+
+
 class DropService:
     """Multi-tenant DROP scheduler with an LRU basis-reuse cache."""
 
@@ -151,8 +179,18 @@ class DropService:
         enable_cache: bool = True,
         cache_ttl: int | None = None,
         cache_ttl_auto: bool = False,
+        enable_suffix_update: bool = True,
+        suffix_budget: float = 0.25,
     ) -> None:
         self.max_inflight = max(int(max_inflight), 1)
+        # append-only escalation knobs: a prefix-matched suffix larger than
+        # suffix_budget * fitted rows skips revalidation (a map fitted that
+        # many rows ago mostly buys a failed validation) and goes straight
+        # to the incremental update; 0.0 means always update, and
+        # enable_suffix_update=False restores the PR 3 revalidate-or-refit
+        # behavior (no tracker state is kept either)
+        self.enable_suffix_update = enable_suffix_update
+        self.suffix_budget = float(suffix_budget)
         # share the process-wide buckets by default: plain drop() calls (e.g.
         # the CLI's jit warmup) and the service then compile the same shapes
         self.bucket = bucket or DEFAULT_BUCKETS
@@ -277,16 +315,8 @@ class DropService:
         q, entry = val.query, val.entry
         bucket = self._validation_bucket(val)
         tv = time.perf_counter()  # validation compute (excludes queue wait)
-        # Zero-pad the basis to its rank bucket so the jitted TLB table keeps
-        # the bucketed shapes of the fit path (zero columns never change the
-        # entries the validation reads); min(m, d) mirrors the fit path's
-        # hard cap so late-iteration fit shapes and hit shapes coincide.
-        v = entry.v
-        pad_w = bucket.bucket_rank(entry.k, min(q.x.shape))
-        if pad_w > v.shape[1]:
-            v = np.concatenate(
-                [v, np.zeros((v.shape[0], pad_w - v.shape[1]), v.dtype)], axis=1
-            )
+        # shared rank-bucket padding: hit shapes coincide with fit shapes
+        v = bucket.pad_basis(entry.v, min(q.x.shape))
         est = TLBEstimator(
             np.ascontiguousarray(q.x, dtype=np.float32),
             jnp.asarray(v),
@@ -354,16 +384,37 @@ class DropService:
                     )
                     prefix = entry is not None
                 if entry is not None:
-                    val = _Validation(q, entry, fp, t0, prefix=prefix)
+                    val = self._route_hit(q, entry, fp, t0, prefix)
                     self._place_validation(val)  # sharded: pick a device
                     self._validations.append(val)
                     continue
             self._launch_cold(q, fp, t0)
         self._queue.extendleft(reversed(deferred))  # keep submission order
 
-    def _place_validation(self, val: _Validation) -> None:
-        """Assign a device to a pending validation (no-op on one device;
-        the sharded subclass load-balances it like a runner)."""
+    def _route_hit(self, q, entry, fp, t0, prefix):
+        """Turn a cache hit into its work item. Normally a revalidation —
+        but a prefix match whose suffix exceeds the drift budget skips it
+        and goes straight to the incremental subspace update (revalidating
+        a map that predates that much new data mostly buys a failed
+        validation before the same update runs anyway)."""
+        if prefix and self._suffix_updatable(q, entry):
+            if q.x.shape[0] - entry.rows > self.suffix_budget * entry.rows:
+                return _SuffixUpdate(q, entry, fp, t0)
+        return _Validation(q, entry, fp, t0, prefix=prefix)
+
+    def _suffix_updatable(self, q: ReduceQuery, entry: BasisCacheEntry) -> bool:
+        """Whether ``entry`` carries updater state that can absorb this
+        query's suffix (tracker rows must mark exactly the entry's prefix)."""
+        return (
+            self.enable_suffix_update
+            and entry.tracker is not None
+            and entry.tracker.rows == entry.rows
+            and entry.method == q.method
+        )
+
+    def _place_validation(self, val) -> None:
+        """Assign a device to a pending validation or suffix update (no-op
+        on one device; the sharded subclass load-balances it like a runner)."""
 
     def _launch_cold(
         self,
@@ -437,6 +488,17 @@ class DropService:
             wall_s=time.perf_counter() - fl.t0,
         )
         if res.satisfied and self.enable_cache and fl.runner.cacheable:
+            tracker = None
+            if self.enable_suffix_update and getattr(
+                fl.runner, "supports_update", False
+            ):
+                # memoized by the off-lock priming in _step; the guard
+                # matches it — a failing bootstrap costs the entry its
+                # incremental path, never the drain
+                try:
+                    tracker = fl.runner.tracker()
+                except Exception:
+                    tracker = None
             self.cache.put(
                 fl.fingerprint,
                 BasisCacheEntry(
@@ -448,6 +510,7 @@ class DropService:
                     satisfied=True,
                     method=fl.query.method,
                     rows=fl.query.x.shape[0],
+                    tracker=tracker,
                 ),
             )
 
@@ -482,9 +545,9 @@ class DropService:
         return self._inflight.popleft() if self._inflight else None
 
     def _pop_work(self):
-        """Next unit of device compute: pending revalidations first (they
-        are short and serve a waiting tenant), else a runner iteration.
-        Caller holds the lock."""
+        """Next unit of device compute: pending revalidations and suffix
+        updates first (they are short and serve a waiting tenant), else a
+        runner iteration. Caller holds the lock."""
         if self._validations:
             return self._validations.popleft()
         return self._pop_runner()
@@ -496,6 +559,21 @@ class DropService:
     def _step(self, fl: _InFlight) -> bool:
         """Run one iteration of ``fl`` outside the lock; returns liveness."""
         alive = fl.runner.step()
+        if (
+            not alive
+            and self.enable_cache
+            and self.enable_suffix_update
+            and getattr(fl.runner, "supports_update", False)
+        ):
+            # prime the updater state here, off-lock: _finish (under the
+            # scheduler lock) then attaches the memoized tracker for free.
+            # Only satisfied results are cached, so an unsatisfiable query
+            # must not pay the O(m·d·k) bootstrap for a tracker nobody keeps
+            try:
+                if fl.runner.result().satisfied:
+                    fl.runner.tracker()
+            except Exception:
+                pass  # no best basis (all steps raised): nothing to track
         label = "default" if fl.device is None else str(fl.device)
         with self._lock:
             self.stats.device_iterations[label] = (
@@ -516,10 +594,13 @@ class DropService:
     def _run_validation(self, val: _Validation, done: list[int]) -> None:
         """Execute one revalidation outside the lock and commit the verdict:
         a pass serves the cached map (a prefix match is additionally
-        re-registered under the grown dataset's fingerprint, so the stream's
-        next append matches again), a fail falls through to a cold launch
-        (with warm-start bookkeeping; a failed prefix entry still seeds the
-        warm rank bound). Verdicts feed the cache's TTL auto-tuner."""
+        re-registered under the grown dataset's fingerprint — with the
+        suffix folded into its updater state — so the stream's next append
+        matches again), a failed PREFIX validation escalates to an
+        incremental suffix update when the entry carries updater state, and
+        only otherwise falls through to a cold launch (with warm-start
+        bookkeeping; a failed prefix entry still seeds the warm rank
+        bound). Verdicts feed the cache's TTL auto-tuner."""
         errored = False
         try:
             passed, result = self._validate(val)
@@ -528,6 +609,17 @@ class DropService:
             # NOT a drift observation, so it stays out of the TTL tuner
             passed, result, errored = False, None, True
         q = val.query
+        new_tracker = None
+        if passed and val.prefix and self._suffix_updatable(q, val.entry):
+            # fold the validated suffix into the updater state (pure merge:
+            # the shared entry never mutates), still outside the lock, so
+            # the stream's NEXT append keeps its incremental path
+            try:
+                new_tracker = val.entry.tracker.merge(
+                    q.x[val.entry.rows :], val.entry.tracker.width
+                )
+            except Exception:
+                new_tracker = None  # re-register without updater state
         with self._lock:
             self._stepping_now.remove(val)
             if not errored:
@@ -548,6 +640,7 @@ class DropService:
                             satisfied=True,
                             method=val.entry.method,
                             rows=q.x.shape[0],
+                            tracker=new_tracker,
                         ),
                     )
                 self._results[q.query_id] = ServeResult(
@@ -558,6 +651,19 @@ class DropService:
                     wall_s=time.perf_counter() - val.t0,
                 )
                 done.append(q.query_id)
+            elif (
+                not errored
+                and val.prefix
+                and self._suffix_updatable(q, val.entry)
+            ):
+                # drift observed on an append-only stream: repair the map
+                # from the suffix before giving up on reuse entirely. An
+                # ERRORED validation is different — a broken entry would
+                # break the merge the same way, so it keeps the guaranteed
+                # cold-refit fallback
+                upd = _SuffixUpdate(q, val.entry, val.fingerprint, val.t0)
+                self._place_validation(upd)
+                self._validations.append(upd)
             else:
                 self._launch_cold(
                     q, val.fingerprint, val.t0,
@@ -565,6 +671,85 @@ class DropService:
                         val.entry.k
                         if val.prefix and val.entry.satisfied
                         else None
+                    ),
+                )
+
+    def _apply_suffix_update(self, upd: _SuffixUpdate):
+        """Device compute for one suffix update (outside the lock): merge
+        the appended rows into the cached updater state and TLB-gate the
+        smallest satisfying rank on the grown data. The sharded subclass
+        wraps this in the work item's device scope."""
+        return subspace_suffix_update(
+            upd.entry.tracker,
+            upd.query.x,
+            upd.query.cfg,
+            bucket=self._validation_bucket(upd),
+        )
+
+    def _run_suffix_update(self, upd: _SuffixUpdate, done: list[int]) -> None:
+        """Execute one incremental subspace update outside the lock and
+        commit: a TLB-satisfying merge serves the query and re-registers
+        the cache entry (updated map + updater state) under the grown
+        fingerprint; a failed gate falls through to the cold-refit last
+        resort; an update that RAISES finishes the query with
+        ``ServeResult.error`` set — never wedging the drain."""
+        q = upd.query
+        error, tracker, result, pairs = None, None, None, 0
+        try:
+            tracker, result, pairs = self._apply_suffix_update(upd)
+        except Exception as exc:
+            error = f"{type(exc).__name__}: {exc}"
+        with self._lock:
+            self._stepping_now.remove(upd)
+            self.stats.validation_pairs += pairs
+            if error is not None:
+                self.stats.failures += 1
+                self.stats.suffix_update_failures += 1
+                d = q.x.shape[1]
+                res = ReduceResult(
+                    v=np.zeros((d, 0), np.float32),
+                    mean=np.zeros(d, np.float32),
+                    k=0, tlb_estimate=0.0, satisfied=False, runtime_s=0.0,
+                    iterations=[], method=q.method,
+                )
+                self._results[q.query_id] = ServeResult(
+                    query_id=q.query_id,
+                    result=res,
+                    wall_s=time.perf_counter() - upd.t0,
+                    error=error,
+                )
+                done.append(q.query_id)
+            elif result.satisfied:
+                self.stats.suffix_updates += 1
+                self.cache.put(
+                    upd.fingerprint,
+                    BasisCacheEntry(
+                        v=result.v,
+                        mean=result.mean,
+                        k=result.k,
+                        target_tlb=q.cfg.target_tlb,
+                        tlb_estimate=result.tlb_estimate,
+                        satisfied=True,
+                        method=q.method,
+                        rows=q.x.shape[0],
+                        tracker=tracker,
+                    ),
+                )
+                self._results[q.query_id] = ServeResult(
+                    query_id=q.query_id,
+                    result=result,
+                    suffix_update=True,
+                    wall_s=time.perf_counter() - upd.t0,
+                )
+                done.append(q.query_id)
+            else:
+                # the suffix outgrew the tracked headroom: cold refit is the
+                # last resort, warm-started from the entry's known-good rank
+                self.stats.suffix_update_failures += 1
+                self._launch_cold(
+                    q, upd.fingerprint, upd.t0,
+                    fallback_warm_k=(
+                        upd.entry.k if upd.entry.satisfied else None
                     ),
                 )
 
@@ -579,7 +764,9 @@ class DropService:
         if work is None:
             return False, more
         done: list[int] = []
-        if isinstance(work, _Validation):
+        if isinstance(work, _SuffixUpdate):
+            self._run_suffix_update(work, done)
+        elif isinstance(work, _Validation):
             self._run_validation(work, done)
         else:
             try:

@@ -78,6 +78,8 @@ class ShardedDropService(DropService):
         cache_entries: int = 16,
         enable_cache: bool = True,
         cache_ttl: int | None = None,
+        enable_suffix_update: bool = True,
+        suffix_budget: float = 0.25,
     ) -> None:
         if isinstance(devices, int) or devices is None:
             devices = serve_devices(devices)
@@ -95,6 +97,8 @@ class ShardedDropService(DropService):
             bucket=self.class_buckets[first_class],
             enable_cache=enable_cache,
             cache_ttl=cache_ttl,
+            enable_suffix_update=enable_suffix_update,
+            suffix_budget=suffix_budget,
         )
         self.devices = devices
         self._slots = [_DeviceSlot(d) for d in devices]
@@ -153,6 +157,12 @@ class ShardedDropService(DropService):
     def _validate(self, val):
         with jax.default_device(val.device or self.devices[0]):
             return super()._validate(val)
+
+    def _apply_suffix_update(self, upd):
+        # the merge itself is host numpy, but the TLB gate's jitted table
+        # must land on the work item's device like any validation
+        with jax.default_device(upd.device or self.devices[0]):
+            return super()._apply_suffix_update(upd)
 
     def _slot_of(self, device) -> _DeviceSlot:
         return next(s for s in self._slots if s.device == device)

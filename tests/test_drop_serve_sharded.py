@@ -249,3 +249,71 @@ def test_two_device_run_bit_matches_single_device():
     assert len(res["occupancy"]) == 2, res
     assert all(n > 0 for n in res["occupancy"].values()), res
     assert sum(res["occupancy"].values()) == res["iterations"]
+
+
+SUFFIX_PROG = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+import jax
+from repro.core import DropConfig
+from repro.core.cost import zero_cost
+from repro.data import sinusoid_mixture
+from repro.serve_drop import DropService, ShardedDropService
+
+assert len(jax.devices()) == 2, jax.devices()
+PARITY_CFG = DropConfig(target_tlb=0.95, seed=0, min_iterations=99)
+# append-only stream: snapshots are prefixes of one generative process
+x_full = sinusoid_mixture(700, 48, rank=3, seed=3)[0]
+snapshots = [x_full[:500], x_full[:600], x_full]
+
+def drive(svc):
+    out = []
+    for snap in snapshots:  # sequential: prefix matching is submit-time
+        svc.submit(np.ascontiguousarray(snap), PARITY_CFG, zero_cost())
+        out.append(svc.run()[0])
+    return out
+
+# budget 0: every append takes the suffix-update path on both services
+ref = drive(DropService(suffix_budget=0.0))
+svc = ShardedDropService(devices=2, suffix_budget=0.0)
+assert len(svc.devices) == 2
+out = drive(svc)
+
+bit_identical = all(
+    s.result.k == r.result.k
+    and s.suffix_update == r.suffix_update
+    and np.array_equal(s.result.v, r.result.v)
+    and np.array_equal(s.result.mean, r.result.mean)
+    for r, s in zip(ref, out)
+)
+print(json.dumps({
+    "bit_identical": bit_identical,
+    "suffix_flags": [s.suffix_update for s in out],
+    "ks": [s.result.k for s in out],
+    "suffix_updates": svc.stats.suffix_updates,
+    "suffix_update_failures": svc.stats.suffix_update_failures,
+    "fit_calls": svc.stats.fit_calls,
+}))
+'''
+
+
+@pytest.mark.slow  # subprocess pays a fresh jax init + cold compiles
+def test_two_device_suffix_update_parity():
+    """The incremental suffix-update path must be placement-invariant: a
+    forced 2-device mesh serves the same append stream with bit-identical
+    updated maps (the merge is host numpy; the TLB gate compiles the same
+    executable per device class) and the same escalation decisions."""
+    out = subprocess.run(
+        [sys.executable, "-c", SUFFIX_PROG],
+        capture_output=True, text=True, timeout=1800,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["bit_identical"], res
+    assert res["suffix_flags"] == [False, True, True], res
+    assert res["suffix_updates"] == 2, res
+    assert res["suffix_update_failures"] == 0, res

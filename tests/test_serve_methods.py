@@ -164,10 +164,13 @@ def test_appended_rows_served_via_prefix_hit():
 
 def test_drifted_suffix_fails_prefix_validation_and_warm_starts():
     """A grown dataset whose appended rows broke the subspace must NOT be
-    served from the prefix entry: revalidation on the suffix-bearing data
-    fails, and the cold refit warm-starts from the prefix entry's rank."""
+    served stale. With suffix updating disabled this is the PR 3 ladder:
+    revalidation on the suffix-bearing data fails and the cold refit
+    warm-starts from the prefix entry's rank. (With updating enabled the
+    same workload escalates through the incremental update first — covered
+    in test_suffix_update.py.)"""
     x = _data(rows=500, rank=3)
-    svc = DropService()
+    svc = DropService(enable_suffix_update=False)
     cfg = DropConfig(target_tlb=0.95, seed=0)
     svc.submit(x, cfg, zero_cost())
     first = svc.run()[0]
@@ -179,10 +182,11 @@ def test_drifted_suffix_fails_prefix_validation_and_warm_starts():
     ).astype(np.float32)  # 400 white-noise rows: old basis can't cover them
     svc.submit(grown, cfg, zero_cost())
     r = svc.run()[0]
-    assert not r.cache_hit and not r.prefix_hit
+    assert not r.cache_hit and not r.prefix_hit and not r.suffix_update
     assert r.warm_started  # the failed prefix entry still seeded the rank
     assert r.result.satisfied and r.result.k > first.result.k
     assert svc.cache.validation_failures == 1
+    assert svc.stats.suffix_updates == 0
 
 
 def test_prefix_requires_method_and_shape_match():

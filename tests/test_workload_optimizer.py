@@ -126,8 +126,16 @@ def test_e2e_demo_drop_chosen_and_faster(tmp_path):
     assert o["pca"].result.k < o["fft"].result.k < o["paa"].result.k
     assert o["pca"].objective < o["fft"].objective
     assert o["pca"].objective < o["paa"].objective
-    # measured end-to-end: strict vs PAA (wide margin); 5% tolerance vs FFT
-    # (the k-NN kernel's k-independent O(m^2) term leaves a thin margin that
-    # container timing noise can straddle)
+    # measured end-to-end: strict vs PAA (wide margin); 5% tolerance vs FFT.
+    # The slack exists because the k-NN block pays a k-INDEPENDENT O(m^2)
+    # term — building the (b, m) distance matrix is memory-bound and
+    # identical at k=3 and k=25 — so on CPU the pca-vs-fft e2e gap is only
+    # the O(m^2 k) matmul delta, thin enough for container timing noise to
+    # straddle. analytics/knn.py removes the second k-independent pass
+    # (self-exclusion) with top_k(2) on ACCELERATORS only: measured on
+    # XLA:CPU, lax.top_k is a 20-40x pessimization while where+argmin fuses
+    # into one pass anyway — the distance-matrix build itself is
+    # irreducible on every backend. The objective margin (cost-model
+    # ranking) stays wide and is asserted strictly above.
     assert o["pca"].end_to_end_s < o["paa"].end_to_end_s, rep.summary()
     assert o["pca"].end_to_end_s < o["fft"].end_to_end_s * 1.05, rep.summary()
