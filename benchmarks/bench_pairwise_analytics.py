@@ -1,0 +1,171 @@
+"""Fused pairwise-analytics engine vs the legacy host-loop paths.
+
+Per task (kNN / DBSCAN / KDE) and per reduced dimensionality, times the
+fused single-dispatch engine (``analytics.pairwise``) against the legacy
+blocked host loop it replaced (one dispatch + one device->host sync per
+(block, m) distance tile). The dims {3, 25, 95} are the k's PCA/FFT/PAA
+produce at target TLB 0.98 on the structured ``bench_e2e_workload`` data —
+i.e. exactly the downstream shapes the §4.4 end-to-end comparison pays for.
+
+Timing follows the harness convention: ``warm()`` x2 before the clock (the
+analytics paths are deterministic single-shot jits, but two runs also
+settle allocator/cache state), then best-of-N. DROP itself is never
+invoked here, so no ``min_iterations`` pinning applies — the inputs are
+seeded raw matrices shared bit-for-bit by both legs.
+
+    python benchmarks/bench_pairwise_analytics.py
+    python benchmarks/bench_pairwise_analytics.py --rows 8000 --dims 3,25,95
+    python benchmarks/bench_pairwise_analytics.py --json pairwise.json  # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+TASKS = ("knn", "dbscan", "kde")
+
+
+def _eps_for(x, quantile: float = 0.005, probe: int = 512, seed: int = 0):
+    """An eps giving ~quantile of pairs as neighbors (sampled): keeps the
+    DBSCAN legs comparable across dims — neighbor sets small but non-empty,
+    so the host side (BFS + decode vs eager np.nonzero) is exercised too."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    s = x[rng.integers(0, x.shape[0], size=min(probe, x.shape[0]))]
+    d2 = (
+        (s * s).sum(1)[:, None] + (s * s).sum(1)[None, :] - 2.0 * s @ s.T
+    )
+    vals = np.sqrt(np.maximum(d2[np.triu_indices(s.shape[0], 1)], 0.0))
+    return float(np.quantile(vals, quantile))
+
+
+def _time_best(fn, iters: int) -> float:
+    from benchmarks.harness import warm
+
+    warm(fn, runs=2)
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure(
+    rows: int = 8000,
+    dims: tuple = (3, 25, 95),
+    tasks: tuple = TASKS,
+    iters: int = 3,
+    seed: int = 0,
+) -> dict:
+    """Fused-vs-legacy legs per (task, d); returns a JSON-ready record."""
+    import numpy as np
+
+    from repro.analytics import (
+        dbscan,
+        dbscan_legacy,
+        gaussian_kde,
+        gaussian_kde_legacy,
+        nearest_neighbors,
+        nearest_neighbors_legacy,
+    )
+
+    rec = {"rows": rows, "seed": seed, "tasks": {t: {} for t in tasks}}
+    rng = np.random.default_rng(seed)
+    for d in dims:
+        x = rng.normal(size=(rows, d)).astype(np.float32)
+        legs = {}
+        if "knn" in tasks:
+            legs["knn"] = (
+                lambda x=x: nearest_neighbors(x),
+                lambda x=x: nearest_neighbors_legacy(x),
+            )
+        if "dbscan" in tasks:
+            eps = _eps_for(x, seed=seed)
+            legs["dbscan"] = (
+                lambda x=x, e=eps: dbscan(x, eps=e, min_samples=5),
+                lambda x=x, e=eps: dbscan_legacy(x, eps=e, min_samples=5),
+            )
+        if "kde" in tasks:
+            legs["kde"] = (
+                lambda x=x: gaussian_kde(x),
+                lambda x=x: gaussian_kde_legacy(x),
+            )
+        for task, (fused, legacy) in legs.items():
+            t_fused = _time_best(fused, iters)
+            t_legacy = _time_best(legacy, iters)
+            rec["tasks"][task][f"d{d}"] = {
+                "fused_ms": round(t_fused * 1e3, 1),
+                "legacy_ms": round(t_legacy * 1e3, 1),
+                "speedup": round(t_legacy / t_fused, 2),
+            }
+    return rec
+
+
+def run(full: bool = False) -> list:
+    """Harness rows (benchmarks/run.py integration). The small path keeps
+    the whole module CI-sized; --full runs the acceptance shape m=8000."""
+    from benchmarks.harness import Row
+
+    rec = measure(
+        rows=8000 if full else 2500,
+        dims=(3, 25, 95) if full else (3, 25),
+        iters=3 if full else 2,
+    )
+    rows = []
+    for task, by_d in rec["tasks"].items():
+        for dkey, leg in by_d.items():
+            rows.append(
+                Row(
+                    f"pairwise/{task}/m{rec['rows']}_{dkey}/fused",
+                    leg["fused_ms"] * 1e3,
+                    f"legacy_ms={leg['legacy_ms']};"
+                    f"speedup={leg['speedup']}",
+                )
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=8000)
+    ap.add_argument("--dims", type=str, default="3,25,95")
+    ap.add_argument("--tasks", type=str, default="knn,dbscan,kde")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the record as JSON (nightly CI artifact)")
+    args = ap.parse_args()
+
+    rec = measure(
+        rows=args.rows,
+        dims=tuple(int(d) for d in args.dims.split(",")),
+        tasks=tuple(t.strip() for t in args.tasks.split(",")),
+        iters=args.iters,
+        seed=args.seed,
+    )
+    print(f"pairwise analytics: m={rec['rows']} (fused engine vs legacy "
+          f"host loop, warm x2, best-of-{args.iters})")
+    for task, by_d in rec["tasks"].items():
+        for dkey, leg in by_d.items():
+            print(f"  {task:6s} {dkey:>4s}  "
+                  f"fused={leg['fused_ms']:8.1f}ms  "
+                  f"legacy={leg['legacy_ms']:8.1f}ms  "
+                  f"speedup={leg['speedup']:5.2f}x")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "bench_drop_serve",       # §5 reuse at the service layer: qps + cache
     "bench_e2e_workload",     # §4.4 via WorkloadOptimizer: DR+analytics e2e
     "bench_incremental_stream",  # append-only: suffix update vs reval/refit
+    "bench_pairwise_analytics",  # fused engine vs legacy host loops
 
     "bench_mnist_like",       # §4.5: beyond time series
     "bench_kernels",          # kernel layer

@@ -1,6 +1,19 @@
 """Downstream analytics operators (pure JAX/numpy): k-NN retrieval, DBSCAN
-clustering, kernel density estimation — the pipelines DROP pre-processes."""
+clustering, kernel density estimation — the pipelines DROP pre-processes.
+All three run on the shared fused tiled pairwise engine (``pairwise``);
+``*_legacy`` variants keep the pre-engine host loops as parity oracles."""
 
-from repro.analytics.dbscan import dbscan  # noqa: F401
-from repro.analytics.kde import gaussian_kde  # noqa: F401
-from repro.analytics.knn import knn_retrieval_accuracy, nearest_neighbors  # noqa: F401
+from repro.analytics.dbscan import dbscan, dbscan_legacy  # noqa: F401
+from repro.analytics.kde import gaussian_kde, gaussian_kde_legacy  # noqa: F401
+from repro.analytics.knn import (  # noqa: F401
+    knn_retrieval_accuracy,
+    nearest_neighbors,
+    nearest_neighbors_legacy,
+)
+from repro.analytics.pairwise import (  # noqa: F401
+    NeighborDecoder,
+    pairwise_dbscan,
+    pairwise_kde,
+    pairwise_knn,
+    unpack_neighbors,
+)

@@ -1,11 +1,22 @@
 """DBSCAN (Ester et al. 1996) — the paper's second end-to-end task (§4.4).
 
-Blocked radius queries (O(m^2 k) distance work, jitted) + host BFS expansion.
+The device side is one fused tiled scan (``analytics.pairwise``): eps-ball
+degree counts + packed uint32 neighbor bitmasks in a single dispatch and a
+single device->host transfer. The host BFS consumes the packed bits — core
+checks read the precomputed degrees, and a row is only ever decoded
+(``unpack_neighbors``) when the expansion actually visits it, replacing the
+legacy per-row ``np.nonzero`` over m boolean matrix rows.
+
+``dbscan_legacy`` keeps the pre-engine blocked host loop as the parity
+oracle / benchmark baseline. Both paths share ``_bfs``, so fused-vs-legacy
+label parity is exact (identical traversal order — DBSCAN border-point
+labels are traversal-order dependent).
 """
 
 from __future__ import annotations
 
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,29 +40,42 @@ def _neighbor_lists(x: np.ndarray, eps: float, block: int = 1024) -> list[np.nda
     m = x.shape[0]
     out: list[np.ndarray] = []
     for a in range(0, m, block):
-        mask = np.asarray(_radius_block(xs[a : a + block], xs, eps2))
-        for r in range(mask.shape[0]):
+        xq = xs[a : a + block]
+        n = xq.shape[0]
+        if n < block:
+            # pad the remainder to the full block: every tail shape used to
+            # mint a fresh XLA executable (one compile per distinct m %
+            # block); padded rows are sliced off before the host scan
+            xq = jnp.pad(xq, ((0, block - n), (0, 0)))
+        mask = np.asarray(_radius_block(xq, xs, eps2))[:n]
+        for r in range(n):
             nbrs = np.nonzero(mask[r])[0]
             out.append(nbrs[nbrs != a + r])
     return out
 
 
-def dbscan(
-    x: np.ndarray, eps: float = 0.5, min_samples: int = 5, block: int = 1024
+def _bfs(
+    m: int,
+    min_samples: int,
+    degrees: np.ndarray,
+    neighbors: Callable[[int], np.ndarray],
 ) -> np.ndarray:
-    """Cluster labels per point; -1 = noise."""
-    m = x.shape[0]
-    nbrs = _neighbor_lists(x, eps, block=block)
+    """The (host) expansion shared by the fused and legacy paths.
+
+    ``degrees`` INCLUDE the self point (a point is always within eps of
+    itself); ``neighbors(p)`` returns p's eps-neighbors sorted ascending,
+    self excluded — the exact arrays the legacy path precomputed, so the
+    traversal (and with it every border-point label) is identical."""
     labels = np.full(m, UNVISITED, dtype=np.int64)
     cluster = 0
     for p in range(m):
         if labels[p] != UNVISITED:
             continue
-        if nbrs[p].size + 1 < min_samples:
+        if degrees[p] < min_samples:
             labels[p] = NOISE
             continue
         labels[p] = cluster
-        frontier = list(nbrs[p])
+        frontier = list(neighbors(p))
         while frontier:
             q = frontier.pop()
             if labels[q] == NOISE:
@@ -59,7 +83,37 @@ def dbscan(
             if labels[q] != UNVISITED:
                 continue
             labels[q] = cluster
-            if nbrs[q].size + 1 >= min_samples:
-                frontier.extend(nbrs[q])
+            if degrees[q] >= min_samples:
+                frontier.extend(neighbors(q))
         cluster += 1
     return labels
+
+
+def dbscan(
+    x: np.ndarray,
+    eps: float = 0.5,
+    min_samples: int = 5,
+    block: int = 1024,
+    *,
+    use_kernels: bool = False,
+) -> np.ndarray:
+    """Cluster labels per point; -1 = noise. One fused device scan."""
+    from repro.analytics.pairwise import NeighborDecoder, pairwise_dbscan
+
+    m = x.shape[0]
+    counts, packed = pairwise_dbscan(
+        x, eps, block, block, use_kernels=use_kernels
+    )
+    return _bfs(m, min_samples, counts, NeighborDecoder(packed, m))
+
+
+def dbscan_legacy(
+    x: np.ndarray, eps: float = 0.5, min_samples: int = 5, block: int = 1024
+) -> np.ndarray:
+    """The pre-engine path: blocked radius queries with a host sync per
+    block and eager per-row ``np.nonzero``. Parity oracle / benchmark
+    baseline."""
+    m = x.shape[0]
+    nbrs = _neighbor_lists(x, eps, block=block)
+    degrees = np.array([n.size + 1 for n in nbrs])
+    return _bfs(m, min_samples, degrees, lambda p: nbrs[p])

@@ -118,6 +118,14 @@ class ShapeBucketCache:
         vectors, so the padded fit is exact for the real rows)."""
         return self._record("rows", round_up(n, self.row_quantum))
 
+    def bucket_tile_rows(self, n: int, tile: int) -> int:
+        """Padded row count for a fused tiled scan (``analytics.pairwise``):
+        next multiple of the tile size. The tile grid is part of the compiled
+        shape, so quantizing to the tile keeps remainder tiles out of the jit
+        cache — every m in (q*tile, (q+1)*tile] shares one executable.
+        Recorded under the ``rows`` family (same telemetry as the fit pads)."""
+        return self._record("rows", round_up(n, max(int(tile), 1)))
+
     def summary(self) -> str:
         parts = []
         for family, st in self.stats.items():

@@ -1,3 +1,23 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def kernel_backend_live() -> bool:
+    """Whether a Pallas kernel would actually EXECUTE as a kernel here:
+    native on TPU, interpreter under ``REPRO_PALLAS_INTERPRET=1``. The
+    shared copy of the gating rule (``pairwise_reduce/ops.py`` dispatches
+    through it; the older per-kernel ``ops.py`` files predate it) — callers
+    with a fused-jnp fallback (``analytics.pairwise``) consult it before
+    routing to a dispatcher, so ``use_kernels=True`` on a plain CPU backend
+    falls back to the fused path instead of a materializing ref oracle.
+    Deliberately import-light: no pallas imports at package level."""
+    if jax.default_backend() == "tpu":
+        return True
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"

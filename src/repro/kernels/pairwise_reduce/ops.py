@@ -1,0 +1,59 @@
+"""Dispatch wrappers for the pairwise-reduction kernels (TPU / interpret /
+ref), following the ``kernels/matmul`` + ``kernels/pairwise_tlb`` convention:
+native Pallas on TPU, interpreter mode under ``REPRO_PALLAS_INTERPRET=1``,
+pure-jnp oracle everywhere else.
+
+Note the production CPU path does NOT come through here:
+``analytics.pairwise`` only routes to these wrappers when a kernel backend
+is live (TPU or interpret mode), and otherwise runs its fused jnp scan —
+the ref oracles below materialize the full distance matrix and exist for
+the kernel test sweeps and direct callers only.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import kernel_backend_live
+from repro.kernels.pairwise_reduce.pairwise_reduce import (
+    pairwise_dbscan_pallas,
+    pairwise_kde_pallas,
+    pairwise_knn_pallas,
+)
+from repro.kernels.pairwise_reduce.ref import (
+    pairwise_dbscan_ref,
+    pairwise_kde_ref,
+    pairwise_knn_ref,
+)
+
+
+def pairwise_knn_reduce(xq: jax.Array, x: jax.Array, m: int, **kw):
+    if jax.default_backend() == "tpu":
+        return pairwise_knn_pallas(xq, x, m, **kw)
+    if kernel_backend_live():  # non-TPU: true only under interpret mode
+        return pairwise_knn_pallas(xq, x, m, interpret=True, **kw)
+    return pairwise_knn_ref(xq, x, m)
+
+
+def pairwise_dbscan_reduce(
+    xq: jax.Array, x: jax.Array, m: int, eps2: float, **kw
+):
+    if jax.default_backend() == "tpu":
+        return pairwise_dbscan_pallas(xq, x, m, float(eps2), **kw)
+    if kernel_backend_live():
+        return pairwise_dbscan_pallas(
+            xq, x, m, float(eps2), interpret=True, **kw
+        )
+    return pairwise_dbscan_ref(xq, x, m, float(eps2))
+
+
+def pairwise_kde_reduce(
+    xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float, **kw
+):
+    if jax.default_backend() == "tpu":
+        return pairwise_kde_pallas(xq, x, m, float(inv_two_h2), **kw)
+    if kernel_backend_live():
+        return pairwise_kde_pallas(
+            xq, x, m, float(inv_two_h2), interpret=True, **kw
+        )
+    return pairwise_kde_ref(xq, x, m, float(inv_two_h2))

@@ -1,0 +1,249 @@
+"""Fused pairwise-reduction Pallas kernels (the analytics-side hot path).
+
+One kernel per downstream task, all the same shape: grid (m_q/bq, m/bk),
+query-tile axis 'parallel', dataset-tile axis 'arbitrary' (sequential) so
+the per-row online reduction carries across dataset tiles in VMEM scratch —
+the (bq, d) x (d, bk) distance tile is MXU-shaped, lives only in VMEM, and
+the m x m distance matrix never exists (flash-attention-style tiling,
+mirroring ``kernels/pairwise_tlb``):
+
+* ``pairwise_knn_pallas``    — running (min-d2, argmin), self excluded;
+* ``pairwise_dbscan_pallas`` — eps-ball degree counts (carried) + packed
+                               uint32 neighbor bitmasks (tile-local write);
+* ``pairwise_kde_pallas``    — running Gaussian exp-sum.
+
+The true row count ``m`` and the task scalar (eps^2 / 1/(2h^2)) are STATIC:
+they bake the padding masks and threshold into the compiled kernel, keeping
+the reduction bit-identical to the jnp engine's tile body at the cost of a
+recompile per (m, scalar) — acceptable on the kernel path, which exists for
+accelerator backends (CPU serving uses the fused jnp scan).
+
+Like the sibling kernels this runs natively on TPU and under
+``interpret=True`` everywhere else (the CPU test path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+
+def _tile_d2(xq_ref, x_ref, i, j, m, bq, bk):
+    """(bq, bk) squared-distance tile with global row/col ids; padded
+    dataset columns masked to +inf."""
+    xqt = xq_ref[...].astype(jnp.float32)
+    xt = x_ref[...].astype(jnp.float32)
+    sq_q = jnp.sum(xqt * xqt, axis=1, keepdims=True)
+    sq_t = jnp.sum(xt * xt, axis=1)
+    d2 = sq_q + sq_t[None, :] - 2.0 * jnp.dot(
+        xqt, xt.T, preferred_element_type=jnp.float32
+    )
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    d2 = jnp.where(cols >= m, jnp.inf, d2)
+    return d2, rows, cols
+
+
+def _knn_kernel(xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx, *, m, bq, bk):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_d2[...] = jnp.full_like(acc_d2, jnp.inf)
+        acc_idx[...] = jnp.zeros_like(acc_idx)
+
+    d2, rows, cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    d2 = jnp.where(rows == cols, jnp.inf, d2)  # self excluded
+    t_d2 = jnp.min(d2, axis=1, keepdims=True)
+    t_idx = (j * bk + jnp.argmin(d2, axis=1)[:, None]).astype(jnp.int32)
+    # strict < keeps the earlier tile on ties — first-occurrence argmin,
+    # matching the jnp engine and the legacy global argmin exactly
+    better = t_d2 < acc_d2[...]
+    acc_d2[...] = jnp.where(better, t_d2, acc_d2[...])
+    acc_idx[...] = jnp.where(better, t_idx, acc_idx[...])
+    idx_ref[...] = acc_idx[...]  # final j's write is the answer
+    d2_ref[...] = acc_d2[...]
+
+
+def pack_bits_u32(mask: jax.Array) -> jax.Array:
+    """(rows, cols) bool -> (rows, cols//32) uint32, little-endian bit order
+    (bit j of word w flags column w*32 + j). THE bit-layout definition for
+    this package: the kernel body and the ref oracle both pack through it,
+    and the engine's jnp tile body (``analytics.pairwise._pack_bits``)
+    mirrors it — cross-path agreement is pinned by the parity sweeps."""
+    rows, cols = mask.shape
+    u = mask.astype(jnp.uint32).reshape(rows, cols // 32, 32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(u * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def _dbscan_kernel(xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt, *, m, bq, bk, eps2):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_cnt[...] = jnp.zeros_like(acc_cnt)
+
+    d2, _rows, _cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    mask = d2 <= eps2  # self included (d2=0); the host BFS drops it
+    acc_cnt[...] += jnp.sum(mask, axis=1, keepdims=True, dtype=jnp.int32)
+    cnt_ref[...] = acc_cnt[...]
+    packed_ref[...] = pack_bits_u32(mask)
+
+
+def _kde_kernel(xq_ref, x_ref, out_ref, acc, *, m, bq, bk, inv_two_h2):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    d2, _rows, cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    e = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_h2)
+    e = jnp.where(cols < m, e, 0.0)
+    acc[...] += jnp.sum(e, axis=1, keepdims=True)
+    out_ref[...] = acc[...]
+
+
+def _pad_to(arr: jax.Array, rows: int) -> jax.Array:
+    return jnp.pad(arr, ((0, rows - arr.shape[0]), (0, 0)))
+
+
+def _grid_and_specs(xq, x, bq, bk):
+    """Common ragged-shape padding + (grid, in_specs) for the three kernels."""
+    mq, d = xq.shape
+    pq = (-mq) % bq
+    pk = (-x.shape[0]) % bk
+    xq = _pad_to(xq, mq + pq)
+    x = _pad_to(x, x.shape[0] + pk)
+    grid = ((mq + pq) // bq, x.shape[0] // bk)
+    in_specs = [
+        pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+    ]
+    return xq, x, grid, in_specs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "block_q", "block_k", "interpret")
+)
+def pairwise_knn_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(mq, d), (mk, d) -> (nn index (mq,) int32, nn squared dist (mq,))."""
+    mq = xq.shape[0]
+    bq, bk = min(block_q, max(mq, 1)), block_k
+    xq, x, grid, in_specs = _grid_and_specs(xq, x, bq, bk)
+    idx, d2 = pl.pallas_call(
+        functools.partial(_knn_kernel, m=m, bq=bq, bk=bk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running min d2
+            pltpu.VMEM((bq, 1), jnp.int32),  # running argmin
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    return idx[:mq, 0], d2[:mq, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "eps2", "block_q", "block_k", "interpret"),
+)
+def pairwise_dbscan_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    eps2: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """-> (eps-ball counts (mq,) int32, packed bitmask (mq, mk_pad/32))."""
+    mq = xq.shape[0]
+    bq = min(block_q, max(mq, 1))
+    bk = max(32, (block_k // 32) * 32)  # packed words divide the tile
+    xq, x, grid, in_specs = _grid_and_specs(xq, x, bq, bk)
+    w = x.shape[0] // 32
+    cnt, packed = pl.pallas_call(
+        functools.partial(
+            _dbscan_kernel, m=m, bq=bq, bk=bk, eps2=float(eps2)
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bk // 32), lambda i, j: (i, j)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((xq.shape[0], w), jnp.uint32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.int32),  # running degree count
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    return cnt[:mq, 0], packed[:mq]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "inv_two_h2", "block_q", "block_k", "interpret"),
+)
+def pairwise_kde_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    inv_two_h2: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> Gaussian exp-SUM per query row (mq,); the caller divides by m."""
+    mq = xq.shape[0]
+    bq, bk = min(block_q, max(mq, 1)), block_k
+    xq, x, grid, in_specs = _grid_and_specs(xq, x, bq, bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kde_kernel, m=m, bq=bq, bk=bk, inv_two_h2=float(inv_two_h2)
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running exp-sum
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    return out[:mq, 0]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the pairwise-reduction kernels.
+
+Deliberately UNFUSED: each oracle materializes the full (mq, mk) distance
+matrix and reduces it in one shot — the simplest possible statement of the
+semantics, used by the kernel test sweeps. Production CPU callers never come
+here; ``analytics.pairwise`` falls back to its fused jnp scan instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _full_d2(xq: jax.Array, x: jax.Array, m: int) -> jax.Array:
+    xq = xq.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    sq_q = jnp.sum(xq * xq, axis=1, keepdims=True)
+    sq_x = jnp.sum(x * x, axis=1)
+    d2 = sq_q + sq_x[None, :] - 2.0 * jnp.matmul(
+        xq, x.T, precision=jax.lax.Precision.HIGHEST
+    )
+    cols = jnp.arange(x.shape[0])
+    return jnp.where(cols[None, :] >= m, jnp.inf, d2)
+
+
+def pairwise_knn_ref(xq: jax.Array, x: jax.Array, m: int):
+    d2 = _full_d2(xq, x, m)
+    rows = jnp.arange(xq.shape[0])
+    cols = jnp.arange(x.shape[0])
+    d2 = jnp.where(rows[:, None] == cols[None, :], jnp.inf, d2)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(d2, idx[:, None], axis=1)[:, 0]
+
+
+def pairwise_dbscan_ref(xq: jax.Array, x: jax.Array, m: int, eps2: float):
+    from repro.kernels.pairwise_reduce.pairwise_reduce import pack_bits_u32
+
+    mask = _full_d2(xq, x, m) <= jnp.float32(eps2)
+    counts = jnp.sum(mask, axis=1, dtype=jnp.int32)
+    pad = (-x.shape[0]) % 32
+    packed = pack_bits_u32(jnp.pad(mask, ((0, 0), (0, pad))))
+    return counts, packed
+
+
+def pairwise_kde_ref(xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float):
+    d2 = _full_d2(xq, x, m)
+    e = jnp.where(
+        jnp.isfinite(d2),
+        jnp.exp(-jnp.maximum(d2, 0.0) * jnp.float32(inv_two_h2)),
+        0.0,
+    )
+    return jnp.sum(e, axis=1)

@@ -17,7 +17,10 @@ for a direct speedup figure. ``--grow-steps N`` switches to the append-only
 demo: one tenant's dataset grows by ``--grow-frac`` rows per step and each
 snapshot climbs the escalation ladder (prefix hit -> incremental suffix
 update -> cold refit as last resort; tune with ``--suffix-budget`` /
-``--no-suffix-update``).
+``--no-suffix-update``). ``--use-kernels`` opts served queries into the
+Pallas kernel path end-to-end (fit matmuls + TLB validations; native on
+TPU, interpreter under ``REPRO_PALLAS_INTERPRET=1``, fused-jnp fallback on
+plain CPU — always safe to set).
 """
 
 from __future__ import annotations
@@ -170,6 +173,13 @@ def main() -> None:
                          "front-end instead of batch submit+run")
     ap.add_argument("--queue-capacity", type=int, default=64,
                     help="ingest backlog bound before reject-with-retry-after")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route served queries' hot matmuls and TLB "
+                         "validations through the Pallas kernel wrappers "
+                         "(native on TPU; interpret-safe on CPU — set "
+                         "REPRO_PALLAS_INTERPRET=1 to force interpreter "
+                         "execution, otherwise CPU falls back to the fused "
+                         "jnp paths)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--compare-sequential", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -184,7 +194,10 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown --method {unknown}; know {REDUCER_METHODS}")
     methods = [methods[i % len(methods)] for i in range(args.queries)]
-    cfg = DropConfig(target_tlb=args.target, seed=args.seed)
+    cfg = DropConfig(
+        target_tlb=args.target, seed=args.seed,
+        use_kernels=args.use_kernels,
+    )
     cost = downstream_cost(args.downstream, args.rows)
 
     if args.devices > 1:

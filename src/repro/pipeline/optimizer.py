@@ -40,32 +40,37 @@ from repro.core.cost import CostModel, downstream_cost
 from repro.core.reducer import REDUCER_METHODS, make_reducer
 from repro.core.types import DropConfig, ReduceResult
 
-# analytics runners keyed by the same names core.cost.downstream_cost prices
-DOWNSTREAMS: dict[str, Callable[[np.ndarray], object]] = {}
+# analytics runners keyed by the same names core.cost.downstream_cost prices.
+# Contract (changed with the fused engine): each entry is called as
+# fn(xt, use_kernels) — registrants must accept the positional bool even if
+# they ignore it
+DOWNSTREAMS: dict[str, Callable[[np.ndarray, bool], object]] = {}
 
 
 def _register_downstreams() -> None:
     from repro.analytics import dbscan, gaussian_kde, nearest_neighbors
 
     DOWNSTREAMS.update(
-        knn=lambda xt: nearest_neighbors(xt),
-        dbscan=lambda xt: dbscan(xt),
-        kde=lambda xt: gaussian_kde(xt),
+        knn=lambda xt, uk: nearest_neighbors(xt, use_kernels=uk),
+        dbscan=lambda xt, uk: dbscan(xt, use_kernels=uk),
+        kde=lambda xt, uk: gaussian_kde(xt, use_kernels=uk),
     )
 
 
 _register_downstreams()
 
 
-def run_downstream(name: str, xt: np.ndarray):
-    """Execute the named analytics task on reduced data ``xt``."""
+def run_downstream(name: str, xt: np.ndarray, *, use_kernels: bool = False):
+    """Execute the named analytics task on reduced data ``xt``. All three
+    tasks run on the fused pairwise engine; ``use_kernels`` opts into its
+    Pallas kernel path where a kernel backend is live (TPU/interpret)."""
     try:
         fn = DOWNSTREAMS[name]
     except KeyError:
         raise KeyError(
             f"unknown downstream {name!r}; know {tuple(DOWNSTREAMS)}"
         ) from None
-    return fn(np.ascontiguousarray(xt, dtype=np.float32))
+    return fn(np.ascontiguousarray(xt, dtype=np.float32), use_kernels)
 
 
 # DR-cost ordering for the plan: O(md) PAA, O(md) Haar, O(md log d) FFT,
@@ -123,9 +128,15 @@ class WorkloadOptimizer:
 
     ``methods`` — candidate operators (default: the paper's §4.4 trio plus
     DWT; pass ``REDUCER_METHODS`` for all five).
-    ``cfg`` — shared ``DropConfig`` (TLB target, confidence, seeds).
+    ``cfg`` — shared ``DropConfig`` (TLB target, confidence, seeds;
+    ``cfg.use_kernels`` also routes the EXECUTED analytics through the
+    fused engine's Pallas kernel path, end-to-end with the DR fits).
     ``cost_coeff`` — override the calibrated seconds/(m^2 k) coefficient of
     the downstream cost model (see ``core.cost.calibrate_quadratic``).
+    ``legacy_cost`` — price with the paper's pure O(m^2 k) model instead of
+    the default model with the measured k-independent O(m^2) memory term
+    (the term is method-independent, so the CHOICE is identical either
+    way — only the absolute priced objectives differ).
     """
 
     def __init__(
@@ -133,6 +144,7 @@ class WorkloadOptimizer:
         methods: Sequence[str] = ("pca", "fft", "paa", "dwt"),
         cfg: DropConfig | None = None,
         cost_coeff: float | None = None,
+        legacy_cost: bool = False,
     ) -> None:
         unknown = [m for m in methods if m not in REDUCER_METHODS]
         if unknown:
@@ -140,6 +152,7 @@ class WorkloadOptimizer:
         self.methods = tuple(methods)
         self.cfg = cfg or DropConfig()
         self.cost_coeff = cost_coeff
+        self.legacy_cost = legacy_cost
 
     def plan(self, x: np.ndarray, downstream: str = "knn") -> list[str]:
         """Candidate evaluation order: cheapest DR first, DROP last (a
@@ -150,8 +163,11 @@ class WorkloadOptimizer:
 
     def _cost_model(self, downstream: str, m: int) -> CostModel:
         if self.cost_coeff is not None:
-            return downstream_cost(downstream, m, coeff=self.cost_coeff)
-        return downstream_cost(downstream, m)
+            return downstream_cost(
+                downstream, m, coeff=self.cost_coeff,
+                legacy_cost=self.legacy_cost,
+            )
+        return downstream_cost(downstream, m, legacy_cost=self.legacy_cost)
 
     def optimize(
         self,
@@ -211,7 +227,9 @@ class WorkloadOptimizer:
             for o in targets:
                 xt = o.result.transform(x)
                 t0 = time.perf_counter()
-                run_downstream(downstream, xt)
+                run_downstream(
+                    downstream, xt, use_kernels=self.cfg.use_kernels
+                )
                 o.downstream_s = time.perf_counter() - t0
                 o.end_to_end_s = o.reduce_s + o.downstream_s
         return report

@@ -370,3 +370,32 @@ def test_stats_and_result_ordering():
     assert svc.stats.cache_hits == 2
     assert svc.stats.fit_calls == svc.stats.iterations
     assert svc.stats.fit_calls > 0
+
+
+# ------------------------------------------------------- use_kernels plumb
+
+
+def test_served_query_use_kernels_interpret_parity(monkeypatch):
+    """ReduceQuery carries cfg.use_kernels end-to-end: a served query with
+    the kernel path forced through the Pallas interpreter must reach the
+    same rank and a satisfying TLB as the plain served run (bit-exact k —
+    the kernels compute the same tables; interpret mode only swaps the
+    executor). Covers the launch/drop_serve.py --use-kernels plumbing."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    x = _datasets(1, rows=160, dim=16)[0]
+    plain = DropService(enable_cache=False)
+    plain.submit(x, PARITY_CFG, zero_cost())
+    r_plain = plain.run()[0]
+
+    kcfg = DropConfig(
+        target_tlb=0.95, seed=0, min_iterations=99, use_kernels=True
+    )
+    svc = DropService(enable_cache=False)
+    svc.submit(x, kcfg, zero_cost())
+    r_kern = svc.run()[0]
+    assert r_kern.error is None
+    assert r_kern.result.satisfied
+    assert r_kern.result.k == r_plain.result.k
+    np.testing.assert_allclose(
+        r_kern.result.tlb_estimate, r_plain.result.tlb_estimate, atol=5e-4
+    )

@@ -131,3 +131,77 @@ def test_gram_eigvecs_match_svd_right_vectors():
     v_svd = vt[:5].T
     overlap = np.linalg.norm(v_gram.T @ v_svd) ** 2 / 5
     assert overlap > 0.999
+
+
+# --------------------------------------------------- pairwise_reduce sweeps
+
+from repro.kernels.pairwise_reduce.pairwise_reduce import (  # noqa: E402
+    pairwise_dbscan_pallas,
+    pairwise_kde_pallas,
+    pairwise_knn_pallas,
+)
+from repro.kernels.pairwise_reduce.ref import (  # noqa: E402
+    pairwise_dbscan_ref,
+    pairwise_kde_ref,
+    pairwise_knn_ref,
+)
+
+PR_BLOCKS = dict(block_q=16, block_k=32)
+
+PR_SHAPES = [
+    (32, 32, 8),   # exact tiles
+    (48, 80, 16),  # multi-tile carry across dataset tiles
+    (33, 61, 7),   # ragged -> padding path on both axes
+    (1, 16, 4),    # single query row
+    (3, 3, 2),     # blocks larger than dims
+]
+
+
+@pytest.mark.parametrize("mq,mk,d", PR_SHAPES)
+def test_pairwise_knn_kernel_matches_ref(mq, mk, d):
+    x = _rand(jax.random.PRNGKey(7), (mk, d), jnp.float32)
+    xq = x[:mq]  # kNN queries ARE dataset rows (self-exclusion contract)
+    gi, gd = pairwise_knn_pallas(xq, x, mk, interpret=True, **PR_BLOCKS)
+    ri, rd = pairwise_knn_ref(xq, x, mk)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_allclose(
+        np.asarray(gd), np.asarray(rd), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pairwise_knn_kernel_near_duplicates_tie_break():
+    """First-occurrence argmin across tiles: the kernel's strict-< carry
+    must match the ref's global argmin on (near-)duplicate rows."""
+    x = np.array(_rand(jax.random.PRNGKey(8), (70, 6), jnp.float32))
+    x[40] = x[3]          # exact duplicate across tiles
+    x[41] = x[3] + 1e-4   # near duplicate
+    x = jnp.asarray(x)
+    gi, _ = pairwise_knn_pallas(x, x, 70, interpret=True, **PR_BLOCKS)
+    ri, _ = pairwise_knn_ref(x, x, 70)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+@pytest.mark.parametrize("mq,mk,d", PR_SHAPES)
+def test_pairwise_dbscan_kernel_matches_ref(mq, mk, d):
+    x = _rand(jax.random.PRNGKey(9), (mk, d), jnp.float32)
+    xq = x[:mq]
+    eps2 = 1.5 ** 2
+    gc, gp = pairwise_dbscan_pallas(xq, x, mk, eps2, interpret=True, **PR_BLOCKS)
+    rc, rp = pairwise_dbscan_ref(xq, x, mk, eps2)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(rc))
+    # widths differ by padding; the extra words must be all-zero
+    gp, rp = np.asarray(gp), np.asarray(rp)
+    w = min(gp.shape[1], rp.shape[1])
+    np.testing.assert_array_equal(gp[:, :w], rp[:, :w])
+    assert not gp[:, w:].any() and not rp[:, w:].any()
+
+
+@pytest.mark.parametrize("mq,mk,d", PR_SHAPES)
+def test_pairwise_kde_kernel_matches_ref(mq, mk, d):
+    x = _rand(jax.random.PRNGKey(10), (mk, d), jnp.float32)
+    xq = x[:mq]
+    got = pairwise_kde_pallas(xq, x, mk, 0.5, interpret=True, **PR_BLOCKS)
+    want = pairwise_kde_ref(xq, x, mk, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-6
+    )
