@@ -8,19 +8,24 @@ Two claims, measured at the service layer:
   validation per repeat. Expected: >=1.5x on repeat-heavy traffic.
 * **multi-device scaling** — a multi-tenant cache-COLD workload
   (heterogeneous tenants, each with its own shapes, zero reuse: every query
-  pays a full DROP fit) served by 1 vs N device workers. Following the
-  harness convention, jit compilation is excluded: each worker warms its
-  executables before the clock starts. Expected: >=1.5x at 2 devices.
+  pays a full DROP fit) served by a 1- vs N-worker process fleet. Following
+  the harness convention, jit compilation is excluded: two warm drains land
+  the compiles in the workers before the clock starts. Expected: >=1.5x at
+  2 workers GIVEN >=2 host cores (workers split the core set; a single-core
+  container can only measure the fleet's supervision overhead, ~0.9x).
 
   Measurement note: the XLA *CPU* host platform serializes execution across
   forced host devices inside one client (one execution pool per client), so
-  in-process placement cannot scale on CPU no matter the scheduler — the
-  bench therefore isolates each device in its own worker process (one XLA
-  client per device), which is also how a production CPU deployment shards.
+  in-process placement cannot scale on CPU no matter the scheduler — real
+  CPU scale-out is one worker PROCESS (one XLA client) per device slot,
+  which is also how a production CPU deployment shards. That mode is now a
+  library feature (``repro.serve_drop.FleetSupervisor``: supervised
+  core-pinned workers, framed-pickle pipe protocol, restart-on-death); this
+  bench drives the library instead of carrying its own worker protocol.
   On accelerator backends each device executes independently, so there the
   in-process ``ShardedDropService`` threaded drain provides the overlap and
-  this bench's worker split simply mirrors its placement policy (tenant i ->
-  device i mod N).
+  the fleet's sticky round-robin mirrors its placement (tenant i ->
+  worker i mod N).
 
     python benchmarks/bench_drop_serve.py                # harness rows
     python benchmarks/bench_drop_serve.py --devices 2    # scaling comparison
@@ -31,13 +36,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import subprocess
 import sys
 import time
 
 # runnable both as `python -m benchmarks.bench_drop_serve` and as a script
 # without PYTHONPATH: the repo root provides `benchmarks.`, src/ provides
-# `repro.` (worker subprocesses still receive PYTHONPATH=src explicitly)
+# `repro.` (fleet worker subprocesses receive PYTHONPATH=src from the
+# supervisor itself)
 _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
@@ -52,113 +57,75 @@ def _tenant_args(n_tenants: int) -> list[tuple[int, int, int, int]]:
     ]
 
 
-def _scale_worker_main(argv: list[str]) -> None:
-    """Device-worker entry: serve this worker's tenant shard through a
-    single-device service. Warm first, handshake READY/GO on stdio so the
-    parent's clock excludes startup and compilation."""
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale-worker", type=int, required=True)  # shard index
-    ap.add_argument("--of", type=int, required=True)  # worker count
-    ap.add_argument("--tenants", type=int, default=6)
-    args = ap.parse_args(argv)
-
-    # partition host cores across device workers (multi-worker legs only):
-    # each worker's XLA client otherwise spawns an nproc-wide compute pool
-    # and N workers x nproc threads thrash — a production shard sizes each
-    # replica to cores/replicas, so the bench does too
-    if args.of > 1 and hasattr(os, "sched_setaffinity"):
-        cores = sorted(os.sched_getaffinity(0))
-        mine_cores = {
-            c for i, c in enumerate(cores) if i % args.of == args.scale_worker
-        }
-        os.sched_setaffinity(0, mine_cores or set(cores))
-
+def _run_scale_leg(workers: int, tenants: int) -> dict:
+    """One leg: a ``FleetSupervisor`` of ``workers`` core-pinned processes
+    serves all ``tenants`` concurrently. The fleet IS the library serving
+    mode (``serve_drop.fleet``) — this bench no longer carries its own
+    worker protocol. Sticky round-robin placement (tenant i -> worker
+    i mod N, the uniform-arrival assignment), worker caches off so every
+    query pays a full cold DROP fit, two warm drains so compiles land in
+    the workers outside the clock, then best-of-3 timed drains."""
+    from benchmarks.harness import warm
     from repro.core import DropConfig
     from repro.core.cost import zero_cost
     from repro.data import sinusoid_mixture
-    from repro.serve_drop import DropService
+    from repro.serve_drop import FleetSupervisor
 
-    # tenant i -> worker i mod N: same round-robin the sharded scheduler's
-    # least-loaded admission produces for a uniform arrival order
-    mine = [
-        (i, spec)
-        for i, spec in enumerate(_tenant_args(args.tenants))
-        if i % args.of == args.scale_worker
-    ]
     # min_iterations pins every tenant to the full progressive schedule:
     # Eq. 2 termination is wall-clock-adaptive, so unpinned iteration counts
     # (and with them per-query k and the shape set compiled during warmup)
     # would vary run-to-run and across legs
     datasets = [
-        (i, sinusoid_mixture(rows, dim, rank=rank, seed=seed)[0],
+        (sinusoid_mixture(rows, dim, rank=rank, seed=seed)[0],
          DropConfig(target_tlb=0.98, seed=seed, min_iterations=99))
-        for i, (rows, dim, rank, seed) in mine
+        for rows, dim, rank, seed in _tenant_args(tenants)
     ]
+    with FleetSupervisor(
+        workers=workers,
+        enable_worker_cache=False,  # cache-cold: the claim under test
+        placement="rr",  # sticky homes keep warmed executables valid
+        profile=False,  # rr ignores measured cost; skip the probe time
+    ) as fleet:
 
-    def drain():
-        svc = DropService(max_inflight=len(datasets), enable_cache=False)
-        qids = {svc.submit(x, cfg, zero_cost()): i for i, x, cfg in datasets}
-        return {qids[r.query_id]: r.result.k for r in svc.run()}
+        def drain():
+            qids = {
+                fleet.submit(x, cfg, zero_cost()): i
+                for i, (x, cfg) in enumerate(datasets)
+            }
+            return {
+                qids[r.query_id]: r.result.k
+                for r in fleet.run(timeout=1800)
+            }
 
-    from benchmarks.harness import warm
-
-    # two warm drains (harness convention for DROP's adaptive schedule):
-    # compiles land here, outside the parent's clock
-    warm(drain)
-    print("READY", flush=True)
-    sys.stdin.readline()  # GO
-    # best-of-3 (harness convention): all workers keep draining concurrently,
-    # so contention stays realistic while container noise is filtered
-    wall, ks = float("inf"), {}
-    for _ in range(3):
-        t0 = time.perf_counter()
-        ks = drain()
-        wall = min(wall, time.perf_counter() - t0)
-    print(json.dumps({"shard": args.scale_worker, "wall_s": wall,
-                      "ks": {str(i): k for i, k in ks.items()}}), flush=True)
-
-
-def _run_scale_leg(workers: int, tenants: int) -> dict:
-    """One leg: ``workers`` device processes serve ``tenants`` concurrently.
-    Leg wall = GO -> last worker done (startup/compile excluded)."""
-    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    procs = [
-        subprocess.Popen(
-            [sys.executable, os.path.abspath(__file__),
-             "--scale-worker", str(w), "--of", str(workers),
-             "--tenants", str(tenants)],
-            env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True,
-        )
-        for w in range(workers)
-    ]
-    for p in procs:  # all workers warm before any clock starts
-        assert p.stdout.readline().strip() == "READY"
-    for p in procs:
-        p.stdin.write("GO\n")
-        p.stdin.flush()
-    outs = [json.loads(p.stdout.readline()) for p in procs]
-    for p in procs:
-        p.wait()
-    # leg wall = the slowest worker's best round: the service is only as
-    # fast as its most loaded device
-    wall = max(o["wall_s"] for o in outs)
-    ks: dict[str, int] = {}
-    for o in outs:
-        ks.update(o["ks"])
+        # two warm drains (harness convention for DROP's adaptive schedule)
+        warm(drain)
+        wall, ks = float("inf"), {}
+        for _ in range(3):
+            t0 = time.perf_counter()
+            ks = drain()
+            wall = min(wall, time.perf_counter() - t0)
     return {
         "devices": workers,
         "wall_s": wall,
         "qps": tenants / wall,
-        "ks": [ks[str(i)] for i in range(tenants)],
+        "ks": [ks[i] for i in range(tenants)],
     }
 
 
 def scaling_rows(max_devices: int = 2, tenants: int = 6) -> list:
-    """Cache-cold multi-tenant throughput at 1 vs ``max_devices`` devices."""
+    """Cache-cold multi-tenant throughput at 1 vs ``max_devices`` workers.
+
+    The speedup is core-bound: N workers split the host's cores, so the
+    >=1.5x-at-2-workers claim needs >=2 cores — on a single-core container
+    the comparison measures supervision+transport overhead instead (~0.9x,
+    i.e. the fleet machinery costs <10%), and the row says so."""
     from benchmarks.harness import Row
 
+    cores = (
+        len(os.sched_getaffinity(0))
+        if hasattr(os, "sched_getaffinity")
+        else (os.cpu_count() or 1)
+    )
     legs = [_run_scale_leg(d, tenants) for d in (1, max_devices)]
     base, multi = legs[0], legs[-1]
     speedup = multi["qps"] / base["qps"]
@@ -175,8 +142,10 @@ def scaling_rows(max_devices: int = 2, tenants: int = 6) -> list:
         for leg in legs
     ]
     rows[-1].derived += (
-        f";speedup={speedup:.2f}x vs 1 device (multi-tenant cache-cold: "
-        "every query pays a full fit; one XLA client per device)"
+        f";speedup={speedup:.2f}x vs 1 worker;cores={cores} "
+        "(multi-tenant cache-cold: every query pays a full fit; one XLA "
+        "client per worker; speedup is core-bound — expect >=1.5x only "
+        f"with >={max_devices} cores)"
     )
     return rows
 
@@ -233,7 +202,7 @@ def run(full: bool = False) -> list:
         ),
     ]
     if full:
-        # subprocess legs: minutes of cold compile each, full mode only
+        # fleet legs: minutes of cold compile each, full mode only
         out += scaling_rows()
     return out
 
@@ -258,18 +227,14 @@ def _emit(rows, json_path: str | None) -> None:
 
 
 if __name__ == "__main__":
-    if any(a == "--scale-worker" or a.startswith("--scale-worker=")
-           for a in sys.argv):
-        _scale_worker_main(sys.argv[1:])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    if args.devices is not None:
+        rows = scaling_rows(args.devices, args.tenants)
     else:
-        ap = argparse.ArgumentParser()
-        ap.add_argument("--devices", type=int, default=None)
-        ap.add_argument("--tenants", type=int, default=6)
-        ap.add_argument("--json", type=str, default=None,
-                        help="also write rows as a JSON artifact")
-        args = ap.parse_args()
-        if args.devices is not None:
-            rows = scaling_rows(args.devices, args.tenants)
-        else:
-            rows = run()
-        _emit(rows, args.json)
+        rows = run()
+    _emit(rows, args.json)

@@ -24,6 +24,8 @@ MODULES = [
     "bench_fig10_knn",        # Fig 10 + Tables 2/3/4: e2e k-NN
     "bench_fig12_dbscan",     # Fig 12: e2e DBSCAN
     "bench_drop_serve",       # §5 reuse at the service layer: qps + cache
+                              # (--full adds the FleetSupervisor process-
+                              # worker scaling legs, 1 vs 2 workers)
     "bench_e2e_workload",     # §4.4 via WorkloadOptimizer: DR+analytics e2e
     "bench_incremental_stream",  # append-only: suffix update vs reval/refit
     "bench_pairwise_analytics",  # fused engine vs legacy host loops

@@ -58,6 +58,10 @@ class StragglerMonitor:
         """Returns True when this step is a straggler."""
         hist = self._times[-self.window :]
         self._times.append(seconds)
+        if len(self._times) > self.window:
+            # a long-lived supervisor observes forever: only the rolling
+            # window ever feeds the median, so older samples are dead weight
+            del self._times[: len(self._times) - self.window]
         if len(hist) < 5:
             return False
         median = float(np.median(hist))
@@ -92,8 +96,24 @@ def remesh(tree, new_mesh, specs) -> object:
 
 @dataclass
 class RestartPolicy:
+    """Restart budget with capped exponential backoff.
+
+    ``backoff_s`` is the base delay before the first restart; each further
+    restart doubles it up to ``backoff_cap_s`` (0.0 disables sleeping, the
+    test default). Both ``run`` (inline restart-on-NodeFailure) and the
+    serving fleet's supervisor (which schedules restarts asynchronously via
+    ``delay``) consume the same policy."""
+
     max_restarts: int = 5
-    backoff_s: float = 0.0  # fleet: exponential; tests: none
+    backoff_s: float = 0.0  # base delay; tests: none
+    backoff_cap_s: float = 30.0
+
+    def delay(self, restarts: int) -> float:
+        """Backoff before restart number ``restarts`` (1-based):
+        ``backoff_s * 2**(restarts-1)`` capped at ``backoff_cap_s``."""
+        if self.backoff_s <= 0.0 or restarts <= 0:
+            return 0.0
+        return min(self.backoff_cap_s, self.backoff_s * 2.0 ** (restarts - 1))
 
     def run(self, fn: Callable[[], None]) -> int:
         """Run fn with restart-on-NodeFailure. Returns restart count."""
@@ -106,5 +126,6 @@ class RestartPolicy:
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise
-                if self.backoff_s:
-                    time.sleep(self.backoff_s)
+                d = self.delay(restarts)
+                if d:
+                    time.sleep(d)

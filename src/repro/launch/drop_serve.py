@@ -2,12 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.drop_serve --queries 8
     PYTHONPATH=src python -m repro.launch.drop_serve --devices 2 --async
+    PYTHONPATH=src python -m repro.launch.drop_serve --fleet 2
     PYTHONPATH=src python -m repro.launch.drop_serve --method pca,fft,paa
 
 Generates a synthetic tenant workload (a pool of distinct datasets, with a
 configurable fraction of repeat submissions — the paper-§5 regime), drains it
 through ``DropService`` (or the sharded multi-device scheduler with
-``--devices N``, and the threaded ingest front-end with ``--async``), and
+``--devices N``, the supervised process-worker fleet with ``--fleet N`` —
+the CPU scale-out mode, one XLA client per worker, with fault-tolerant
+restart and measured-cost placement — and the threaded ingest front-end
+with ``--async``), and
 reports queries/sec, cache behavior, per-device occupancy, and the shared
 shape-bucket population. ``--method`` picks the Reducer per query (a comma
 list cycles across the workload — FFT/PAA queries are scheduled and cached
@@ -69,6 +73,7 @@ from repro.core.reducer import REDUCER_METHODS  # noqa: E402
 from repro.data import sinusoid_mixture  # noqa: E402
 from repro.serve_drop import (  # noqa: E402
     DropService,
+    FleetSupervisor,
     IngestFrontend,
     RetryLater,
     ShardedDropService,
@@ -119,14 +124,18 @@ def _serve_append_stream(svc, args, method, cfg, cost) -> None:
           f"{svc.stats.fit_calls} basis fits")
 
 
-def _submit_async(fe: IngestFrontend, datasets, methods, cfg, cost) -> list[int]:
+def _submit_async(
+    fe: IngestFrontend, datasets, methods, cfg, cost, downstream
+) -> list[int]:
     """Stream submissions through the bounded ingest queue, honoring
     reject-with-retry-after backpressure."""
     qids = []
     for x, m in zip(datasets, methods):
         while True:
             try:
-                qids.append(fe.submit(x, cfg, cost, method=m))
+                qids.append(
+                    fe.submit(x, cfg, cost, method=m, downstream=downstream)
+                )
                 break
             except RetryLater as e:
                 time.sleep(e.retry_after_s)
@@ -168,6 +177,14 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="mesh devices for the sharded scheduler (>1 forces "
                          "the host-platform device count on CPU)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve through N supervised worker PROCESSES (one "
+                         "XLA client each — the CPU scale-out mode) instead "
+                         "of the in-process scheduler; excludes --devices")
+    ap.add_argument("--placement", type=str, default="cost",
+                    choices=("cost", "rr"),
+                    help="fleet placement: measured-cost (link alpha/beta + "
+                         "queue depth / worker speed) or sticky round-robin")
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="stream queries through the threaded ingest "
                          "front-end instead of batch submit+run")
@@ -200,7 +217,24 @@ def main() -> None:
     )
     cost = downstream_cost(args.downstream, args.rows)
 
-    if args.devices > 1:
+    if args.fleet > 0:
+        if args.devices > 1:
+            ap.error("--fleet (process workers) and --devices (in-process "
+                     "mesh) are alternative scale-out modes; pick one")
+        if args.grow_steps > 0:
+            ap.error("--grow-steps needs the in-process prefix cache; "
+                     "drop --fleet")
+        # cost closures do not cross the process boundary: the workers
+        # re-price the named downstream task themselves
+        svc = FleetSupervisor(
+            workers=args.fleet,
+            enable_worker_cache=not args.no_cache,
+            placement=args.placement,
+        ).start()
+        print(f"fleet of {args.fleet} worker processes "
+              f"({args.placement} placement): {svc.devices}")
+        cost = None
+    elif args.devices > 1:
         svc = ShardedDropService(
             devices=args.devices,
             max_inflight=args.max_inflight,
@@ -234,20 +268,25 @@ def main() -> None:
     # warm the jit caches with one cold reduce() per distinct (dataset,
     # method) pair so the reported throughput measures serving, not XLA
     # compilation (plain reduce() shares the shape buckets but never touches
-    # the service cache; the baseline single-shots compile nothing)
-    for i, x in enumerate(datasets[: args.datasets]):
-        reduce(x, methods[i], cfg, cost)
+    # the service cache; the baseline single-shots compile nothing). Fleet
+    # workers compile in their OWN processes, so warming here would be
+    # wasted work — their first queries pay the compile instead.
+    if not args.fleet:
+        for i, x in enumerate(datasets[: args.datasets]):
+            reduce(x, methods[i], cfg, cost)
 
     t0 = time.perf_counter()
     if args.use_async:
         with IngestFrontend(svc, queue_capacity=args.queue_capacity) as fe:
-            qids = _submit_async(fe, datasets, methods, cfg, cost)
+            qids = _submit_async(
+                fe, datasets, methods, cfg, cost, args.downstream
+            )
             results = sorted(
                 (fe.result(q) for q in qids), key=lambda r: r.query_id
             )
     else:
         for x, m in zip(datasets, methods):
-            svc.submit(x, cfg, cost, method=m)
+            svc.submit(x, cfg, cost, method=m, downstream=args.downstream)
         results = svc.run()
     dt = time.perf_counter() - t0
 
@@ -256,30 +295,56 @@ def main() -> None:
     mode = "async ingest" if args.use_async else "batch"
     print(f"served {args.queries} queries in {dt*1e3:.0f} ms  "
           f"({qps:.2f} queries/sec, {mode})")
-    print(f"cache: {hits}/{args.queries} hits, "
-          f"{svc.stats.warm_starts} warm starts, "
-          f"{svc.stats.suffix_updates} suffix updates, "
-          f"{svc.stats.fit_calls} basis fits, "
-          f"{len(svc.cache)} entries resident, "
-          f"{svc.stats.rejected} backpressure rejections")
+    if args.fleet:
+        # worker-local caches/buckets live across the process boundary; the
+        # supervisor surfaces its own fleet telemetry instead
+        print(f"cache: {hits}/{args.queries} worker-cache hits, "
+              f"{svc.stats.warm_starts} warm starts, "
+              f"{svc.stats.rejected} backpressure rejections")
+        print(f"fleet: {svc.stats.worker_deaths} deaths, "
+              f"{svc.stats.worker_restarts} restarts, "
+              f"{svc.stats.requeued_queries} requeues, "
+              f"{svc.stats.rebalances} rebalances, "
+              f"{svc.stats.straggler_flags} straggler flags")
+        speeds = ", ".join(
+            f"{w}={s:.2f}" for w, s in sorted(svc.worker_speeds().items())
+        )
+        links = ", ".join(
+            f"{w}: a={p.alpha_s*1e6:.0f}us b={p.beta_s_per_byte*1e9:.2f}ns/B"
+            for w, p in sorted(svc.link_profiles().items())
+        )
+        print(f"worker speeds: {speeds}")
+        print(f"link profiles: {links}")
+    else:
+        print(f"cache: {hits}/{args.queries} hits, "
+              f"{svc.stats.warm_starts} warm starts, "
+              f"{svc.stats.suffix_updates} suffix updates, "
+              f"{svc.stats.fit_calls} basis fits, "
+              f"{len(svc.cache)} entries resident, "
+              f"{svc.stats.rejected} backpressure rejections")
     if svc.stats.device_iterations:
         occ = ", ".join(
             f"{dev}={n}" for dev, n in sorted(svc.stats.device_iterations.items())
         )
         print(f"occupancy (iterations/device): {occ}; "
               f"steals={svc.stats.steals}")
-    print(f"buckets: {svc.bucket.summary()}")
+    if not args.fleet:
+        print(f"buckets: {svc.bucket.summary()}")
     for r in results:
         tag = ("SUFX" if r.suffix_update else "HIT " if r.cache_hit
                else "WARM" if r.warm_started else "COLD")
+        where = f" @{r.worker}" if r.worker else ""
         print(f"  q{r.query_id:02d} [{tag}] {r.result.method:3s} "
               f"k={r.result.k:3d} tlb={r.result.tlb_estimate:.4f} "
-              f"wall={r.wall_s*1e3:7.1f} ms")
+              f"wall={r.wall_s*1e3:7.1f} ms{where}")
+    if args.fleet:
+        svc.shutdown()
 
     if args.compare_sequential:
+        seq_cost = cost or downstream_cost(args.downstream, args.rows)
         t0 = time.perf_counter()
         for x, m in zip(datasets, methods):
-            reduce(x, m, cfg, cost)
+            reduce(x, m, cfg, seq_cost)
         t_seq = time.perf_counter() - t0
         print(f"sequential cold reduce(): {t_seq*1e3:.0f} ms "
               f"({args.queries/t_seq:.2f} queries/sec) -> "

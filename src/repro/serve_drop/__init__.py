@@ -1,8 +1,9 @@
 """Multi-tenant DR serving: batched ``ReduceQuery``s over any ``Reducer``
 method (pca/fft/paa/dwt/jl), shared shape buckets, a method-agnostic reuse
 cache that amortizes fitting across repeat workloads (paper §5) including
-append-only prefix matching, a sharded multi-device scheduler, and an async
-ingest front-end.
+append-only prefix matching, a sharded multi-device scheduler, a supervised
+process-worker fleet (the CPU scale-out mode: fault-tolerant restart +
+measured-cost placement), and an async ingest front-end.
 
 See README.md in this package for the scheduler state machine, the cache
 hierarchy, and the migration table from the PCA-only era names."""
@@ -11,6 +12,10 @@ from repro.serve_drop.cache import (  # noqa: F401
     BasisCacheEntry,
     BasisReuseCache,
     dataset_fingerprint,
+)
+from repro.serve_drop.fleet import (  # noqa: F401
+    FleetSupervisor,
+    LinkProfile,
 )
 from repro.serve_drop.ingest import (  # noqa: F401
     IngestFrontend,

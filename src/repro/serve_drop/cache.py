@@ -185,18 +185,24 @@ class BasisReuseCache:
         """A satisfying entry for this dataset/method fitted at a target >=
         ours (checked loosest-first is unnecessary: any such map,
         revalidated, serves the request). Refreshes LRU recency. Entries
-        past the TTL are skipped (counted in ``expired_hits``): the caller
-        falls through to a cold refit, which re-inserts a fresh entry."""
+        past the TTL are skipped; a lookup that MISSES because its only
+        eligible entries expired counts once in ``expired_hits`` (a live
+        entry serving the hit does not charge the stat for stale
+        bystanders): the caller falls through to a cold refit, which
+        re-inserts a fresh entry."""
         qt = quantize_target(target)
         candidates = []
+        expired = 0
         for key, entry in self._entries.items():
             if not self._eligible(key, fp, method, qt):
                 continue
             if self._expired(entry):
-                self.expired_hits += 1
+                expired += 1
             else:
                 candidates.append(key)
         if not candidates:
+            if expired:
+                self.expired_hits += 1  # expiry CAUSED this miss
             return None
         # prefer the smallest satisfying map among eligible targets
         key = min(candidates, key=lambda c: self._entries[c].k)

@@ -1,0 +1,971 @@
+"""Process-worker serving fleet with fault-tolerant supervision.
+
+The sharded in-process scheduler cannot scale on CPU hosts: XLA:CPU
+serializes execution across forced host devices inside one client (one
+execution pool per client — see the bench notes in
+``benchmarks/bench_drop_serve.py``). Real scale-out on a multi-core host
+therefore means one *process* (one XLA client) per device slot. This
+module promotes the worker-process pattern that used to live privately in
+that bench into a first-class deployment mode:
+
+* **FleetSupervisor** — spawns one core-pinned worker process per slot,
+  routes ``ReduceQuery``s to workers over pipes, and streams
+  ``ServeResult``s back. It duck-types the ``DropService`` surface
+  (``submit``/``try_submit``/``backlog``/``take_result``/``poll``/``run``/
+  ``stats``/``on_result``), so the existing ``IngestFrontend`` async
+  front-end works unchanged: sync, threaded, and process modes share one
+  API.
+* **protocol** — length-prefixed pickle frames over the worker's
+  stdin/stdout pipes (the worker re-points its ``stdout`` at stderr first,
+  so stray prints can never corrupt framing). Messages: ``ready``,
+  heartbeats, queries, results, echo pings (link profiling), compute
+  probes, stop. This replaces the old line-oriented READY/GO handshake.
+* **fault tolerance** — worker death is detected three ways: pipe EOF
+  (fastest — a ``kill -9`` lands here), exitcode polling, and heartbeat
+  timeout (a hung-but-alive worker is killed and treated as dead). A dead
+  worker's in-flight queries are re-dispatched to live workers (bounded by
+  ``max_query_retries``, then finished with ``ServeResult.error``) — a
+  client blocked in ``result()`` is NEVER hung. Restarts go through
+  ``fault.RestartPolicy`` (capped exponential backoff; a worker past the
+  budget is retired and its slot removed). ``fault.FailureInjector`` can
+  be wired into workers (``failure_prob``) so chaos tests exercise the
+  whole ladder deterministically, and a per-worker
+  ``fault.StragglerMonitor`` watches serve times.
+* **measured placement** — beyond round-robin: at startup the supervisor
+  profiles each link's transfer cost by echoing payloads of increasing
+  size and fitting the classic alpha/beta model (``rtt/2 ~ alpha +
+  beta * bytes``, the same latency/bandwidth decomposition colossal-ai's
+  ``AlphaBetaProfiler`` fits for device links), plus each worker's compute
+  speed with a fixed probe. Placement then minimizes *measured* cost:
+  ``link(bytes) + (queue_depth + 1) * est_seconds / speed``, where
+  ``est_seconds`` is a per-tenant EWMA and ``speed`` keeps being
+  re-estimated from observed serve times. Tenants are sticky to their
+  home worker (its basis cache is warm for them) and move only when
+  another worker is decisively cheaper (``rebalance_margin``), surfaced
+  as ``ServiceStats.rebalances``.
+
+Costs across the boundary: ``CostModel`` closures do not pickle, so fleet
+queries carry the ``downstream`` task name (workers re-price it) or one of
+the named cost families (``zero``/``knn``/``linear``, rebuilt from the
+dataset's row count); arbitrary callables are rejected at submit.
+
+The module top imports stdlib only: the worker bootstrap must pin CPU
+affinity BEFORE numpy/jax initialize their thread pools, so every heavy
+import here is deferred into the function that needs it.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import struct
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+_LEN = struct.Struct("<Q")
+_INJECTED_EXIT = 43  # worker exit code for an injected NodeFailure "crash"
+_STOP_WRITER = object()  # sentinel that retires a writer thread
+
+# worker bootstrap for `python -c`: pin affinity from --cores before ANY
+# heavy import (numpy/XLA size their pools from the mask they see first)
+_WORKER_BOOT = (
+    "import os, sys\n"
+    "argv = sys.argv[1:]\n"
+    "if '--cores' in argv:\n"
+    "    cores = argv[argv.index('--cores') + 1]\n"
+    "    if cores and hasattr(os, 'sched_setaffinity'):\n"
+    "        os.sched_setaffinity(0, {int(c) for c in cores.split(',')})\n"
+    "from repro.serve_drop.fleet import _worker_main\n"
+    "_worker_main(argv)\n"
+)
+
+
+# ------------------------------------------------------------------ framing
+
+
+def _send_frame(f, obj) -> None:
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    f.write(_LEN.pack(len(payload)))
+    f.write(payload)
+    f.flush()
+
+
+def _read_exact(f, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = f.read(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv_frame(f):
+    """One framed message, or None on EOF (peer gone)."""
+    head = _read_exact(f, _LEN.size)
+    if head is None:
+        return None
+    payload = _read_exact(f, _LEN.unpack(head)[0])
+    if payload is None:
+        return None
+    return pickle.loads(payload)
+
+
+def _cost_spec(cost):
+    """Serializable form of a downstream cost model (see module docstring)."""
+    if cost is None:
+        return None
+    name = getattr(cost, "name", None)
+    if name in ("zero", "knn", "linear"):
+        return name
+    try:
+        pickle.dumps(cost)
+        return ("pickled", cost)
+    except Exception:
+        raise ValueError(
+            "fleet queries cannot carry arbitrary cost callables across the "
+            "process boundary; pass downstream='knn'/'dbscan'/'kde' or a "
+            "named CostModel (zero/knn/linear) instead"
+        ) from None
+
+
+def _cost_from_spec(spec, rows: int):
+    if spec is None:
+        return None
+    if isinstance(spec, tuple):
+        return spec[1]
+    from repro.core.cost import knn_cost, linear_cost, zero_cost
+
+    return {"zero": zero_cost, "knn": lambda: knn_cost(rows),
+            "linear": lambda: linear_cost(rows)}[spec]()
+
+
+# ------------------------------------------------------------- worker side
+
+
+def _compute_probe(reps: int = 3) -> float:
+    """Fixed CPU-bound probe (seconds): relative worker speed under its
+    core pinning. numpy-only so it never touches the XLA jit cache."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 64)).astype(np.float32)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        np.linalg.svd(a, full_matrices=False)
+    return time.perf_counter() - t0
+
+
+def _serve_one(svc, msg):
+    """Run one query through the worker's service; returns its ServeResult
+    (query ids are remapped to the supervisor's)."""
+    x = msg["x"]
+    cost = _cost_from_spec(msg["cost"], x.shape[0])
+    qid = svc.submit(
+        x, msg["cfg"], cost, method=msg["method"], downstream=msg["downstream"]
+    )
+    out = None
+    for r in svc.run():
+        if r.query_id == qid:
+            out = r
+    out.query_id = msg["qid"]
+    return out
+
+
+def _worker_main(argv: list[str]) -> None:
+    """Fleet worker entry: serve framed queries over stdin/stdout."""
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet-worker", type=int, required=True)
+    ap.add_argument("--incarnation", type=int, default=0)
+    ap.add_argument("--cores", type=str, default="")
+    ap.add_argument("--heartbeat-s", type=float, default=0.5)
+    ap.add_argument("--failure-prob", type=float, default=0.0)
+    ap.add_argument("--failure-seed", type=int, default=0)
+    ap.add_argument("--slowdown-s", type=float, default=0.0)
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args(argv)
+
+    # the `-c` bootstrap pins affinity pre-import; re-apply for direct runs
+    if args.cores and hasattr(os, "sched_setaffinity"):
+        os.sched_setaffinity(0, {int(c) for c in args.cores.split(",")})
+
+    # claim the real stdout for frames, then point fd 1 (and sys.stdout) at
+    # stderr: a stray print anywhere below lands in the log, not the protocol
+    out = os.fdopen(os.dup(1), "wb")
+    os.dup2(2, 1)
+    sys.stdout = sys.stderr
+    inp = os.fdopen(os.dup(0), "rb")
+    wlock = threading.Lock()
+
+    def send(msg) -> None:
+        with wlock:
+            _send_frame(out, msg)
+
+    # heavy imports AFTER affinity: numpy/XLA size their pools off the mask
+    import numpy as np
+
+    from repro.core.types import ReduceResult
+    from repro.fault.faults import FailureInjector, NodeFailure
+    from repro.serve_drop.service import DropService, ServeResult
+
+    svc = DropService(enable_cache=not args.no_cache)
+    injector = (
+        FailureInjector(args.failure_prob, seed=args.failure_seed)
+        if args.failure_prob > 0
+        else None
+    )
+
+    stop_hb = threading.Event()
+
+    def heartbeat() -> None:
+        while not stop_hb.wait(args.heartbeat_s):
+            try:
+                send({"t": "hb"})
+            except OSError:
+                return
+
+    threading.Thread(target=heartbeat, daemon=True).start()
+    send({"t": "ready", "pid": os.getpid(), "incarnation": args.incarnation})
+
+    served = 0
+    while True:
+        msg = _recv_frame(inp)
+        if msg is None or msg["t"] == "stop":
+            break
+        t = msg["t"]
+        if t == "ping":  # link profiling: echo the payload back
+            send({"t": "pong", "n": msg["n"], "blob": msg["blob"]})
+        elif t == "prof":
+            send({"t": "prof", "n": msg["n"], "seconds": _compute_probe()})
+        elif t == "q":
+            served += 1
+            if injector is not None:
+                try:
+                    injector.maybe_fail(served)
+                except NodeFailure:
+                    os._exit(_INJECTED_EXIT)  # simulate a hard crash
+            if args.slowdown_s > 0:
+                time.sleep(args.slowdown_s)
+            t0 = time.perf_counter()
+            try:
+                res = _serve_one(svc, msg)
+            except Exception as exc:  # the query, not the worker, fails
+                d = int(msg["x"].shape[1])
+                res = ServeResult(
+                    query_id=msg["qid"],
+                    result=ReduceResult(
+                        v=np.zeros((d, 0), np.float32),
+                        mean=np.zeros(d, np.float32),
+                        k=0, tlb_estimate=0.0, satisfied=False,
+                        runtime_s=0.0, iterations=[], method=msg["method"],
+                    ),
+                    error=f"{type(exc).__name__}: {exc}",
+                )
+            send({"t": "res", "qid": msg["qid"], "res": res,
+                  "serve_s": time.perf_counter() - t0})
+    stop_hb.set()
+    os._exit(0)
+
+
+# --------------------------------------------------------- supervisor side
+
+
+@dataclass
+class LinkProfile:
+    """Fitted alpha/beta transfer-cost model for one supervisor->worker
+    link: one-way seconds ~ alpha + beta * payload_bytes."""
+
+    alpha_s: float = 1e-4
+    beta_s_per_byte: float = 1e-9
+
+    def seconds(self, nbytes: int) -> float:
+        return self.alpha_s + self.beta_s_per_byte * float(nbytes)
+
+
+@dataclass(eq=False)
+class _FleetQuery:
+    qid: int
+    x: object  # np.ndarray (float32, contiguous)
+    cfg: object
+    cost: object  # _cost_spec form
+    method: str
+    downstream: str | None
+    fp: str
+    t0: float  # submit time (ServeResult.wall_s baseline)
+    nbytes: int
+    retries: int = 0
+    dispatch_t: float = 0.0
+
+
+class _Worker:
+    """Supervisor-side handle for one worker slot (survives restarts)."""
+
+    def __init__(self, index: int, cores: list[int] | None) -> None:
+        self.index = index
+        self.label = f"worker-{index}"
+        self.cores = cores
+        self.proc: subprocess.Popen | None = None
+        self.state = "new"  # new|starting|ready|dead|restarting|lost
+        self.incarnation = 0
+        self.restarts = 0
+        self.restart_due = 0.0
+        self.last_seen = 0.0
+        self.ready_evt = threading.Event()
+        self.outbox: queue.Queue = queue.Queue()
+        self.assigned: dict[int, _FleetQuery] = {}
+        self.link = LinkProfile()
+        self.probe_s: float | None = None
+        self.speed = 1.0  # relative throughput (1.0 = fleet reference)
+        self.served = 0
+        self.straggler = None  # fault.StragglerMonitor, set by supervisor
+        self.rpc: dict[int, tuple[threading.Event, dict]] = {}
+
+
+class FleetSupervisor:
+    """Process-per-slot serving fleet behind the ``DropService`` surface.
+
+    ``workers`` processes are spawned (core-pinned on Linux), profiled, and
+    supervised: crash -> requeue + restart, hang -> kill + restart, chaos
+    injection via ``failure_prob``. Use it exactly like a service::
+
+        with FleetSupervisor(workers=2) as fleet:
+            qid = fleet.submit(x, cfg, downstream="knn")
+            res = fleet.run()[0]            # or fleet.result(qid)
+
+    or behind the async front-end: ``IngestFrontend(FleetSupervisor(...))``.
+    """
+
+    def __init__(
+        self,
+        workers: int = 2,
+        *,
+        restart_policy=None,
+        heartbeat_s: float = 0.5,
+        heartbeat_timeout_s: float | None = None,
+        enable_worker_cache: bool = True,
+        placement: str = "cost",  # "cost" (measured) or "rr" (sticky RR)
+        rebalance_margin: float = 0.7,
+        default_query_s: float = 0.05,
+        max_query_retries: int = 2,
+        profile: bool = True,
+        pin_cores: bool = True,
+        failure_prob: float = 0.0,
+        failure_seed: int = 0,
+        worker_slowdowns: list[float] | None = None,
+        startup_timeout_s: float = 180.0,
+    ) -> None:
+        from repro.fault.faults import RestartPolicy, StragglerMonitor
+        from repro.serve_drop.service import ServiceStats
+
+        if placement not in ("cost", "rr"):
+            raise ValueError(f"unknown placement {placement!r}")
+        n = max(int(workers), 1)
+        self.restart_policy = restart_policy or RestartPolicy(
+            max_restarts=3, backoff_s=0.05, backoff_cap_s=5.0
+        )
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s or max(
+            10.0, 20.0 * heartbeat_s
+        )
+        self.enable_worker_cache = enable_worker_cache
+        self.placement = placement
+        self.rebalance_margin = float(rebalance_margin)
+        self.default_query_s = float(default_query_s)
+        self.max_query_retries = int(max_query_retries)
+        self.profile = profile
+        self.failure_prob = float(failure_prob)
+        self.failure_seed = int(failure_seed)
+        self.worker_slowdowns = worker_slowdowns or []
+        self.startup_timeout_s = startup_timeout_s
+        self.stats = ServiceStats()
+        self.on_result = None  # ingest hook, fired with no lock held
+
+        cores = self._core_partition(n) if pin_cores else [None] * n
+        self._workers = [_Worker(i, cores[i]) for i in range(n)]
+        for w in self._workers:
+            w.straggler = StragglerMonitor()
+        self._lock = threading.RLock()
+        self._pending: deque[_FleetQuery] = deque()
+        self._results: dict[int, object] = {}
+        self._tenant_home: dict[str, int] = {}
+        self._tenant_ref_s: dict[str, float] = {}
+        self._next_id = 0
+        self._next_nonce = 0
+        self._rr = 0
+        self._started = False
+        self._stopping = False
+        self._monitor: threading.Thread | None = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    @property
+    def devices(self) -> list[str]:
+        """Worker labels (IngestFrontend sizes its drain pool off this)."""
+        return [w.label for w in self._workers if w.state != "lost"]
+
+    @staticmethod
+    def _core_partition(n: int) -> list[list[int] | None]:
+        """Strided core sets per worker: each worker's XLA client otherwise
+        spawns an nproc-wide pool and N workers x nproc threads thrash. A
+        single worker keeps the full mask (it IS the machine's share)."""
+        if n == 1 or not hasattr(os, "sched_getaffinity"):
+            return [None] * n
+        cores = sorted(os.sched_getaffinity(0))
+        return [cores[i::n] or cores for i in range(n)]
+
+    def start(self) -> "FleetSupervisor":
+        if self._started:
+            return self
+        self._started = True
+        for w in self._workers:
+            self._spawn(w)
+        deadline = time.perf_counter() + self.startup_timeout_s
+        for w in self._workers:
+            while not w.ready_evt.wait(0.1):
+                if w.proc is not None and w.proc.poll() is not None:
+                    self.shutdown()
+                    raise RuntimeError(
+                        f"{w.label} exited during startup "
+                        f"(exit {w.proc.returncode})"
+                    )
+                if time.perf_counter() > deadline:
+                    self.shutdown()
+                    raise RuntimeError(
+                        f"{w.label} did not come up (see stderr)"
+                    )
+        if self.profile:
+            for w in self._workers:
+                try:
+                    self._profile_worker(w)
+                except (RuntimeError, TimeoutError):
+                    pass  # died mid-profile: supervision restarts it; the
+                    # default link/speed estimates hold until observed
+            self._normalize_speeds()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="fleet-monitor", daemon=True
+        )
+        self._monitor.start()
+        return self
+
+    def _spawn(self, w: _Worker) -> None:
+        """Launch one worker process and its reader/writer threads. The
+        bootstrap pins cores before any heavy import."""
+        argv = [
+            "--fleet-worker", str(w.index),
+            "--incarnation", str(w.incarnation),
+            "--heartbeat-s", str(self.heartbeat_s),
+        ]
+        if w.cores:
+            argv += ["--cores", ",".join(map(str, w.cores))]
+        if not self.enable_worker_cache:
+            argv += ["--no-cache"]
+        if self.failure_prob > 0:
+            argv += [
+                "--failure-prob", str(self.failure_prob),
+                "--failure-seed",
+                str(self.failure_seed + 1000 * w.index + 17 * w.incarnation),
+            ]
+        if w.index < len(self.worker_slowdowns):
+            argv += ["--slowdown-s", str(self.worker_slowdowns[w.index])]
+        env = dict(os.environ)
+        import repro
+
+        src = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        w.proc = subprocess.Popen(
+            [sys.executable, "-c", _WORKER_BOOT] + argv,
+            env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+        )
+        w.state = "starting"
+        w.last_seen = time.perf_counter()
+        w.ready_evt = threading.Event()
+        w.outbox = queue.Queue()
+        threading.Thread(
+            target=self._write_loop, args=(w, w.proc),
+            name=f"fleet-w{w.index}-tx", daemon=True,
+        ).start()
+        threading.Thread(
+            target=self._read_loop, args=(w, w.proc),
+            name=f"fleet-w{w.index}-rx", daemon=True,
+        ).start()
+
+    def shutdown(self, timeout_s: float = 10.0) -> None:
+        """Stop workers and supervision. Pending/in-flight queries are NOT
+        waited for — call ``run()`` (or drain via IngestFrontend) first."""
+        self._stopping = True
+        for w in self._workers:
+            if w.proc is not None and w.proc.poll() is None:
+                w.outbox.put({"t": "stop"})
+            w.outbox.put(_STOP_WRITER)
+        deadline = time.perf_counter() + timeout_s
+        for w in self._workers:
+            if w.proc is None:
+                continue
+            try:
+                w.proc.wait(timeout=max(0.1, deadline - time.perf_counter()))
+            except subprocess.TimeoutExpired:
+                w.proc.kill()
+                w.proc.wait()
+        if self._monitor is not None:
+            self._monitor.join(timeout=2.0)
+
+    def __enter__(self) -> "FleetSupervisor":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------ profiling
+
+    def _rpc(self, w: _Worker, msg: dict, timeout_s: float = 30.0) -> dict:
+        with self._lock:
+            n = self._next_nonce
+            self._next_nonce += 1
+            evt, slot = threading.Event(), {}
+            w.rpc[n] = (evt, slot)
+        w.outbox.put({**msg, "n": n})
+        if not evt.wait(timeout_s):
+            with self._lock:
+                w.rpc.pop(n, None)
+            raise TimeoutError(f"{w.label}: no reply to {msg['t']}")
+        reply = slot["msg"]
+        if reply.get("t") == "dead":  # resolved by _handle_death
+            raise RuntimeError(f"{w.label} died mid-{msg['t']}")
+        return reply
+
+    def _profile_worker(self, w: _Worker) -> None:
+        """Fit the link's alpha/beta transfer model from echo round-trips
+        over growing payloads, and measure compute speed with a fixed
+        probe (colossal-ai AlphaBetaProfiler-style, over pipes)."""
+        import numpy as np
+
+        self._rpc(w, {"t": "ping", "blob": b""})  # throwaway: first-recv cost
+        sizes = [1 << 10, 1 << 15, 1 << 18, 1 << 20]
+        rtts = []
+        for s in sizes:
+            blob = b"\0" * s
+            best = float("inf")
+            for _ in range(2):
+                t0 = time.perf_counter()
+                self._rpc(w, {"t": "ping", "blob": blob})
+                best = min(best, time.perf_counter() - t0)
+            rtts.append(best)
+        beta, alpha = np.polyfit(np.asarray(sizes, float), np.asarray(rtts), 1)
+        # one-way cost; clamp: tiny-noise fits can go (meaninglessly) negative
+        w.link = LinkProfile(
+            alpha_s=max(float(alpha) / 2.0, 1e-6),
+            beta_s_per_byte=max(float(beta) / 2.0, 1e-12),
+        )
+        w.probe_s = float(self._rpc(w, {"t": "prof"})["seconds"])
+
+    def _normalize_speeds(self) -> None:
+        probed = [w.probe_s for w in self._workers if w.probe_s]
+        if not probed:
+            return
+        ref = min(probed)
+        for w in self._workers:
+            if w.probe_s:
+                w.speed = ref / w.probe_s
+
+    # ------------------------------------------------------------- pipe I/O
+
+    def _write_loop(self, w: _Worker, proc: subprocess.Popen) -> None:
+        outbox = w.outbox  # bound to THIS incarnation (respawn swaps it)
+        while True:
+            item = outbox.get()
+            if item is _STOP_WRITER:
+                return
+            try:
+                _send_frame(proc.stdin, item)
+            except (OSError, ValueError):
+                return  # death is handled by the reader's EOF
+
+    def _read_loop(self, w: _Worker, proc: subprocess.Popen) -> None:
+        while True:
+            try:
+                msg = _recv_frame(proc.stdout)
+            except Exception:
+                msg = None
+            if msg is None:
+                break
+            w.last_seen = time.perf_counter()
+            t = msg.get("t")
+            if t == "ready":
+                with self._lock:
+                    if proc is w.proc:
+                        w.state = "ready"
+                w.ready_evt.set()
+            elif t == "res":
+                self._commit_result(w, proc, msg)
+            elif t in ("pong", "prof"):
+                with self._lock:
+                    pending = w.rpc.pop(msg.get("n"), None)
+                if pending is not None:
+                    pending[1]["msg"] = msg
+                    pending[0].set()
+            # "hb" needs nothing beyond the last_seen update above
+        if not self._stopping:
+            self._handle_death(w, proc, "pipe EOF")
+
+    # ------------------------------------------------------------- results
+
+    def _commit_result(self, w: _Worker, proc, msg: dict) -> None:
+        qid = msg["qid"]
+        with self._lock:
+            fq = w.assigned.pop(qid, None) if proc is w.proc else None
+            if fq is None or qid in self._results:
+                return  # stale duplicate (query was requeued after a death)
+            res = msg["res"]
+            res.worker = w.label
+            res.retries = fq.retries
+            res.wall_s = time.perf_counter() - fq.t0
+            self._results[qid] = res
+            if res.error:
+                self.stats.failures += 1
+            if res.cache_hit:
+                self.stats.cache_hits += 1
+            if res.prefix_hit:
+                self.stats.prefix_hits += 1
+            if res.warm_started:
+                self.stats.warm_starts += 1
+            if res.suffix_update:
+                self.stats.suffix_updates += 1
+            iters = len(res.result.iterations)
+            self.stats.iterations += iters
+            self.stats.device_iterations[w.label] = (
+                self.stats.device_iterations.get(w.label, 0) + max(1, iters)
+            )
+            self._observe_speed(w, fq, float(msg.get("serve_s", 0.0)))
+        self._notify(qid)
+
+    def _observe_speed(self, w: _Worker, fq: _FleetQuery, serve_s: float) -> None:
+        """Online throughput tracking: serve times, normalized by the
+        worker's current speed, maintain a per-tenant reference estimate;
+        deviations from it re-estimate the worker's speed. Caller holds
+        the lock."""
+        if serve_s <= 0:
+            return
+        w.served += 1
+        if w.straggler is not None and w.straggler.observe(w.served, serve_s):
+            self.stats.straggler_flags += 1
+        ref = self._tenant_ref_s.get(fq.fp)
+        if ref is not None:
+            obs = max(min(ref / serve_s, 20.0), 0.05)
+            w.speed = 0.7 * w.speed + 0.3 * obs
+        norm = serve_s * w.speed
+        self._tenant_ref_s[fq.fp] = (
+            norm if ref is None else 0.5 * ref + 0.5 * norm
+        )
+
+    def _notify(self, qid: int) -> None:
+        cb = self.on_result
+        if cb is not None:
+            cb(qid)
+
+    # ------------------------------------------------------------ placement
+
+    def _live(self) -> list[_Worker]:
+        return [w for w in self._workers if w.state == "ready"]
+
+    def _cost(self, w: _Worker, fq: _FleetQuery) -> float:
+        est = self._tenant_ref_s.get(fq.fp, self.default_query_s)
+        return w.link.seconds(fq.nbytes) + (len(w.assigned) + 1) * est / max(
+            w.speed, 1e-3
+        )
+
+    def _place(self, fq: _FleetQuery) -> _Worker | None:
+        """Pick a worker for ``fq`` (None when none is live — the query
+        waits in ``_pending`` for a restart). Caller holds the lock."""
+        live = self._live()
+        if not live:
+            return None
+        home_i = self._tenant_home.get(fq.fp)
+        home = (
+            self._workers[home_i]
+            if home_i is not None and self._workers[home_i].state == "ready"
+            else None
+        )
+        if self.placement == "rr":
+            if home is None:
+                home = live[self._rr % len(live)]
+                self._rr += 1
+                self._tenant_home[fq.fp] = home.index
+            return home
+        best = min(live, key=lambda w: (self._cost(w, fq), w.index))
+        if home is None:
+            self._tenant_home[fq.fp] = best.index
+            return best
+        if best is not home and self._cost(best, fq) < (
+            self.rebalance_margin * self._cost(home, fq)
+        ):
+            # decisively cheaper elsewhere: move the tenant (it forfeits
+            # the old home's warm cache, which the margin prices in)
+            self.stats.rebalances += 1
+            self._tenant_home[fq.fp] = best.index
+            return best
+        return home
+
+    def _dispatch(self, fq: _FleetQuery, w: _Worker) -> None:
+        """Hand a query to a worker (caller holds the lock). The payload is
+        framed by the worker's writer thread, so a full pipe never blocks
+        the scheduler."""
+        fq.dispatch_t = time.perf_counter()
+        w.assigned[fq.qid] = fq
+        w.outbox.put({
+            "t": "q", "qid": fq.qid, "x": fq.x, "cfg": fq.cfg,
+            "cost": fq.cost, "method": fq.method, "downstream": fq.downstream,
+        })
+
+    # -------------------------------------------------------------- intake
+
+    def submit(
+        self, x, cfg=None, cost=None, *, method: str = "pca",
+        downstream: str | None = None,
+    ) -> int:
+        qid = self.try_submit(x, cfg, cost, method=method, downstream=downstream)
+        assert qid is not None  # unbounded submit never rejects
+        return qid
+
+    def try_submit(
+        self, x, cfg=None, cost=None, *, method: str = "pca",
+        downstream: str | None = None, max_backlog: int | None = None,
+    ) -> int | None:
+        """Enqueue unless the fleet backlog is at ``max_backlog`` (ingest
+        backpressure). The conversion/hash work runs on the submitter's
+        thread, like ``DropService.try_submit``."""
+        import numpy as np
+
+        from repro.core.types import DropConfig
+        from repro.serve_drop.cache import dataset_fingerprint
+
+        if not self._started:
+            self.start()
+        x = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
+        cfg = cfg or DropConfig()
+        spec = _cost_spec(cost)
+        fp = dataset_fingerprint(x)
+        with self._lock:
+            if max_backlog is not None and self._backlog_locked() >= max_backlog:
+                self.stats.rejected += 1
+                return None
+            qid = self._next_id
+            self._next_id += 1
+            self.stats.queries += 1
+            fq = _FleetQuery(
+                qid=qid, x=x, cfg=cfg, cost=spec, method=method,
+                downstream=downstream, fp=fp, t0=time.perf_counter(),
+                nbytes=int(x.nbytes),
+            )
+            w = self._place(fq)
+            if w is None:
+                self._pending.append(fq)
+            else:
+                self._dispatch(fq, w)
+        return qid
+
+    def _backlog_locked(self) -> int:
+        return len(self._pending) + sum(
+            len(w.assigned) for w in self._workers
+        )
+
+    def backlog(self) -> int:
+        with self._lock:
+            return self._backlog_locked()
+
+    def take_result(self, qid: int):
+        with self._lock:
+            return self._results.pop(qid, None)
+
+    def result(self, qid: int, timeout: float | None = None):
+        """Block until query ``qid`` finishes (fault handling guarantees it
+        does while any worker survives); raises TimeoutError otherwise."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            res = self.take_result(qid)
+            if res is not None:
+                return res
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(f"query {qid} still pending")
+            time.sleep(0.002)
+
+    # ---------------------------------------------------------- supervision
+
+    def _monitor_loop(self) -> None:
+        while not self._stopping:
+            self._supervise_once()
+            time.sleep(0.02)
+
+    def _supervise_once(self) -> None:
+        """One supervision tick: exitcode/heartbeat death checks, due
+        restarts, and pending-query placement."""
+        now = time.perf_counter()
+        for w in self._workers:
+            state, proc = w.state, w.proc
+            if proc is None:
+                continue
+            if state in ("starting", "ready"):
+                if proc.poll() is not None:
+                    self._handle_death(w, proc, f"exit {proc.returncode}")
+                elif (
+                    state == "ready"
+                    and now - w.last_seen > self.heartbeat_timeout_s
+                ):
+                    # alive but mute: kill so the pipe EOFs deterministically
+                    proc.kill()
+                    self._handle_death(w, proc, "heartbeat timeout")
+            elif state == "restarting" and now >= w.restart_due:
+                with self._lock:
+                    if w.state != "restarting":
+                        continue
+                    w.incarnation += 1
+                    self.stats.worker_restarts += 1
+                    self._spawn(w)
+        self._flush_pending()
+
+    def _flush_pending(self) -> None:
+        with self._lock:
+            while self._pending:
+                fq = self._pending[0]
+                w = self._place(fq)
+                if w is None:
+                    return
+                self._pending.popleft()
+                self._dispatch(fq, w)
+
+    def _handle_death(self, w: _Worker, proc, why: str) -> None:
+        """A worker died (or was killed as hung): requeue or fail its
+        in-flight queries so no client ever hangs, then schedule the
+        restart under the RestartPolicy."""
+        failed: list[int] = []
+        with self._lock:
+            if proc is not w.proc or w.state in ("dead", "restarting", "lost"):
+                return
+            w.state = "dead"
+            self.stats.worker_deaths += 1
+            w.outbox.put(_STOP_WRITER)
+            for n, (evt, slot) in list(w.rpc.items()):
+                slot["msg"] = {"t": "dead"}
+                evt.set()
+                w.rpc.pop(n, None)
+            orphans = list(w.assigned.values())
+            w.assigned.clear()
+            exitcode = proc.poll()
+            for fq in orphans:
+                if fq.qid in self._results:
+                    continue
+                fq.retries += 1
+                self._tenant_home.pop(fq.fp, None)  # home is gone
+                if fq.retries > self.max_query_retries:
+                    failed.append(fq.qid)
+                    self._fail_query(
+                        fq,
+                        f"{w.label} died ({why}, exit={exitcode}); "
+                        f"{fq.retries - 1} retries exhausted",
+                    )
+                else:
+                    self.stats.requeued_queries += 1
+                    tgt = self._place(fq)
+                    if tgt is None:
+                        self._pending.append(fq)
+                    else:
+                        self._dispatch(fq, tgt)
+            if w.restarts >= self.restart_policy.max_restarts:
+                w.state = "lost"
+                self.stats.workers_lost += 1
+                if not any(
+                    x.state in ("starting", "ready", "restarting", "dead")
+                    for x in self._workers
+                ):
+                    # nobody left to restart: fail the stranded backlog
+                    while self._pending:
+                        fq = self._pending.popleft()
+                        failed.append(fq.qid)
+                        self._fail_query(fq, "no workers left in the fleet")
+            else:
+                w.restarts += 1
+                w.state = "restarting"
+                w.restart_due = time.perf_counter() + self.restart_policy.delay(
+                    w.restarts
+                )
+        for qid in failed:
+            self._notify(qid)
+
+    def _fail_query(self, fq: _FleetQuery, error: str) -> None:
+        """Finish a query with ServeResult.error (caller holds the lock)."""
+        import numpy as np
+
+        from repro.core.types import ReduceResult
+        from repro.serve_drop.service import ServeResult
+
+        d = int(fq.x.shape[1])
+        self.stats.failures += 1
+        self._results[fq.qid] = ServeResult(
+            query_id=fq.qid,
+            result=ReduceResult(
+                v=np.zeros((d, 0), np.float32), mean=np.zeros(d, np.float32),
+                k=0, tlb_estimate=0.0, satisfied=False, runtime_s=0.0,
+                iterations=[], method=fq.method,
+            ),
+            wall_s=time.perf_counter() - fq.t0,
+            error=error,
+            retries=fq.retries,
+        )
+
+    # ------------------------------------------------------------ draining
+
+    def _poll_once(self) -> tuple[bool, bool]:
+        """Scheduler-primitive shim for ``IngestFrontend``: results arrive
+        on reader threads, so a tick only supervises; (False, more)."""
+        self._supervise_once()
+        return False, self.backlog() > 0
+
+    def poll(self) -> bool:
+        """One supervision tick; True while queries are pending. Sleeps a
+        moment so bare ``while poll(): pass`` loops don't busy-spin."""
+        _, more = self._poll_once()
+        if more:
+            time.sleep(0.002)
+        return more
+
+    def run(self, timeout: float | None = None) -> list:
+        """Drain everything submitted so far; results ordered by query id
+        (the ``DropService.run`` contract)."""
+        if not self._started:
+            self.start()
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while self.backlog():
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(f"{self.backlog()} queries still pending")
+            time.sleep(0.005)
+        with self._lock:
+            out = [self._results[qid] for qid in sorted(self._results)]
+            self._results = {}
+        return out
+
+    # ------------------------------------------------------------ telemetry
+
+    def occupancy(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                w.label: self.stats.device_iterations.get(w.label, 0)
+                for w in self._workers
+            }
+
+    def link_profiles(self) -> dict[str, LinkProfile]:
+        with self._lock:
+            return {w.label: w.link for w in self._workers}
+
+    def worker_speeds(self) -> dict[str, float]:
+        with self._lock:
+            return {w.label: w.speed for w in self._workers}
+
+
+if __name__ == "__main__":  # direct worker entry (debugging aid)
+    _worker_main(sys.argv[1:])

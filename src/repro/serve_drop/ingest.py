@@ -94,14 +94,32 @@ class IngestFrontend:
             t.start()
         return self
 
-    def close(self, drain: bool = True) -> None:
+    def close(
+        self, drain: bool = True, progress_deadline_s: float = 30.0
+    ) -> None:
         """Stop the drain threads; ``drain=True`` finishes accepted work
         first. New submits are rejected as soon as close() begins, and any
         straggler that raced past the closing check is drained synchronously
-        at the end — an accepted query is never left without a scheduler."""
+        at the end — an accepted query is never left without a scheduler.
+
+        The backlog wait is bounded by a PROGRESS deadline, not a total
+        one: as long as the backlog keeps shrinking we keep waiting, but a
+        backlog that has not moved for ``progress_deadline_s`` (a wedged
+        scheduler — e.g. every drain tick raising) is abandoned so close()
+        always returns. Queries stranded that way stay unresolved in the
+        service; ``stats.drain_failures`` records the ticks that raised."""
         self._closing.set()  # reject new submits before waiting on backlog
         if drain and self._threads:
-            while self.service.backlog():
+            last = self.service.backlog()
+            t_last = time.perf_counter()
+            while True:
+                backlog = self.service.backlog()
+                if not backlog:
+                    break
+                if backlog < last:
+                    last, t_last = backlog, time.perf_counter()
+                elif time.perf_counter() - t_last > progress_deadline_s:
+                    break  # no progress: a drain would wait forever
                 time.sleep(0.002)
         self._stop.set()
         with self._wake:
@@ -110,8 +128,14 @@ class IngestFrontend:
             t.join()
         self._threads = []
         if drain:
-            while self.service.poll():  # straggler sweep (see docstring)
-                pass
+            while self.service.backlog():  # straggler sweep (see docstring)
+                try:
+                    if not self.service.poll():
+                        break
+                except Exception:  # same containment as the drain loop
+                    with self.service._lock:
+                        self.service.stats.drain_failures += 1
+                    break
 
     def __enter__(self) -> "IngestFrontend":
         return self.start()
@@ -188,7 +212,20 @@ class IngestFrontend:
 
     def _drain(self) -> None:
         while not self._stop.is_set():
-            stepped, more = self.service._poll_once()
+            try:
+                stepped, more = self.service._poll_once()
+            except Exception:
+                # An exception escaping the scheduler tick (the service
+                # contains runner/validation/commit errors itself, so this
+                # is an admission- or infrastructure-level failure) used to
+                # kill this daemon thread silently — after which
+                # close(drain=True) waited forever on a backlog nothing
+                # would drain. Count it, yield, and keep the thread alive;
+                # close()'s progress deadline bounds the truly wedged case.
+                with self.service._lock:
+                    self.service.stats.drain_failures += 1
+                time.sleep(0.001)
+                continue
             if stepped:
                 continue
             if more:

@@ -101,6 +101,8 @@ class ServeResult:
     suffix_update: bool = False  # served by an incremental subspace update
     wall_s: float = 0.0
     error: str | None = None  # set when the query's runner raised mid-flight
+    worker: str | None = None  # fleet mode: label of the worker that served it
+    retries: int = 0  # fleet mode: re-dispatches after a worker death
 
 
 @dataclass
@@ -118,6 +120,14 @@ class ServiceStats:
     failures: int = 0  # queries finished with ServeResult.error set
     rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
     steals: int = 0  # runners migrated to an idle device between rounds
+    drain_failures: int = 0  # exceptions caught at the ingest drain loop
+    # fleet mode (serve_drop.fleet): process-worker supervision counters
+    worker_deaths: int = 0  # workers that died or were declared hung
+    worker_restarts: int = 0  # restarts performed under the RestartPolicy
+    workers_lost: int = 0  # workers past the restart budget (slot retired)
+    requeued_queries: int = 0  # in-flight queries re-dispatched after a death
+    rebalances: int = 0  # tenants moved to a measured-cheaper worker
+    straggler_flags: int = 0  # worker serve times flagged by StragglerMonitor
     effective_ttl: int | None = None  # live auto-tuned cache TTL (ticks)
     # per-device occupancy: device label -> iterations stepped there; the
     # single-host service books everything under "default"
@@ -556,6 +566,14 @@ class DropService:
         """Rotate a still-live runner back into flight. Caller holds the lock."""
         self._inflight.append(fl)
 
+    def _discard_runner(self, fl: _InFlight) -> None:
+        """Drop a runner from flight wherever it is queued (abandon path).
+        Caller holds the lock."""
+        try:
+            self._inflight.remove(fl)
+        except ValueError:
+            pass
+
     def _step(self, fl: _InFlight) -> bool:
         """Run one iteration of ``fl`` outside the lock; returns liveness."""
         alive = fl.runner.step()
@@ -764,31 +782,70 @@ class DropService:
         if work is None:
             return False, more
         done: list[int] = []
-        if isinstance(work, _SuffixUpdate):
-            self._run_suffix_update(work, done)
-        elif isinstance(work, _Validation):
-            self._run_validation(work, done)
-        else:
-            try:
-                alive = self._step(work)  # device compute, outside the lock
-            except Exception as exc:
-                with self._lock:
-                    self._stepping_now.remove(work)
-                    self._fail(work, exc)
-                done.append(work.query.query_id)
-                alive = None
-            if alive is not None:
-                with self._lock:
-                    self._stepping_now.remove(work)
-                    if alive:
-                        self._requeue_runner(work)  # rotate: fair device share
-                    else:
-                        self._finish(work)
-                        done.append(work.query.query_id)
+        try:
+            if isinstance(work, _SuffixUpdate):
+                self._run_suffix_update(work, done)
+            elif isinstance(work, _Validation):
+                self._run_validation(work, done)
+            else:
+                try:
+                    alive = self._step(work)  # device compute, off the lock
+                except Exception as exc:
+                    with self._lock:
+                        self._stepping_now.remove(work)
+                        self._fail(work, exc)
+                    done.append(work.query.query_id)
+                    alive = None
+                if alive is not None:
+                    with self._lock:
+                        self._stepping_now.remove(work)
+                        if alive:
+                            self._requeue_runner(work)  # rotate: fair share
+                        else:
+                            self._finish(work)
+                            done.append(work.query.query_id)
+        except Exception as exc:
+            # containment of last resort: the per-path handlers above catch
+            # COMPUTE errors, but a commit section (cache put, tracker merge
+            # bookkeeping, stats) raising would otherwise escape into the
+            # drain thread with the work item half-retired — the query then
+            # never finishes and close(drain=True) waits on it forever.
+            # Retire the item everywhere it could still be referenced and
+            # finish its query with ServeResult.error.
+            self._abandon(work, exc, done)
         with self._lock:
             more = self._work_remains()
         self._notify(done)
         return True, more
+
+    def _abandon(self, work, exc: BaseException, done: list[int]) -> None:
+        """Finish ``work``'s query with an error after a scheduler-side
+        exception left it in an unknown state (see ``_poll_once``). The
+        query is failed only if nothing else already produced its result."""
+        q = work.query
+        with self._lock:
+            if work in self._stepping_now:
+                self._stepping_now.remove(work)
+            if isinstance(work, _InFlight):
+                # a requeued runner that then raised in commit: pull it back
+                # out so no thread steps a half-retired item
+                self._discard_runner(work)
+            if q.query_id in self._results:
+                return  # the result was committed before the raise: keep it
+            self.stats.failures += 1
+            d = q.x.shape[1]
+            self._results[q.query_id] = ServeResult(
+                query_id=q.query_id,
+                result=ReduceResult(
+                    v=np.zeros((d, 0), np.float32),
+                    mean=np.zeros(d, np.float32),
+                    k=0, tlb_estimate=0.0, satisfied=False, runtime_s=0.0,
+                    iterations=[], method=q.method,
+                ),
+                wall_s=time.perf_counter() - getattr(work, "t0", time.perf_counter()),
+                error=f"scheduler: {type(exc).__name__}: {exc}",
+            )
+            done.append(q.query_id)
 
     def poll(self) -> bool:
         """One scheduler tick: admit, then run one unit of work — a pending

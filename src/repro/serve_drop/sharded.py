@@ -229,6 +229,14 @@ class ShardedDropService(DropService):
     def _requeue_runner(self, fl: _InFlight) -> None:
         self._slot_of(fl.device).runners.append(fl)
 
+    def _discard_runner(self, fl: _InFlight) -> None:
+        for s in self._slots:
+            try:
+                s.runners.remove(fl)
+                return
+            except ValueError:
+                continue
+
     def _step(self, fl: _InFlight) -> bool:
         # default_device routes the step's uncommitted arrays (TLB pair
         # batches, basis upload) to the runner's device; the committed PRNG

@@ -181,6 +181,68 @@ def test_failing_runner_does_not_wedge_the_scheduler(monkeypatch):
     assert svc.backlog() == 0  # no leaked slots or stepping entries
 
 
+def test_wedged_scheduler_does_not_hang_close(monkeypatch):
+    """Regression: an exception escaping ``_poll_once`` used to kill the
+    drain thread silently, after which ``close(drain=True)`` busy-waited
+    forever on a backlog nothing would drain. Now the drain thread
+    survives (counting ``drain_failures``) and close()'s progress deadline
+    bounds the wait."""
+    svc = DropService()
+
+    def always_raises():
+        raise RuntimeError("wedged scheduler tick")
+
+    monkeypatch.setattr(svc, "_poll_once", always_raises)
+    fe = IngestFrontend(svc, queue_capacity=4)
+    fe.start()
+    fe.submit(_datasets(1)[0], CFG, zero_cost())
+    time.sleep(0.05)  # let drain threads hit the raising tick a few times
+    t0 = time.perf_counter()
+    fe.close(drain=True, progress_deadline_s=0.3)  # must RETURN
+    assert time.perf_counter() - t0 < 10.0
+    assert svc.stats.drain_failures > 0
+    assert not fe._threads  # drain threads joined, none died early
+
+
+def test_commit_failure_fails_query_with_error_result(monkeypatch):
+    """A raise in the commit section (after compute, e.g. cache put /
+    stats bookkeeping) must finish the query with a ``scheduler:`` error
+    result instead of stranding it half-retired."""
+    svc = DropService()
+    real_finish = DropService._finish
+
+    def finish_raises(self, fl):
+        real_finish(self, fl)  # commit first: _abandon must keep the result
+        if not hasattr(self, "_blew_up"):
+            self._blew_up = True
+            raise RuntimeError("injected commit failure")
+
+    monkeypatch.setattr(DropService, "_finish", finish_raises)
+    xs = _datasets(2, rows=200, dim=24)
+    ids = [svc.submit(x, CFG, zero_cost()) for x in xs]
+    out = svc.run()  # must terminate
+    assert [r.query_id for r in out] == ids
+    # the commit ran before the raise, so the committed result wins; the
+    # point is termination with every query answered exactly once
+    assert all(r.result.k >= 1 or r.error for r in out)
+
+    # now a commit that raises BEFORE producing a result: the query is
+    # answered by _abandon with a scheduler error
+    svc2 = DropService()
+
+    def finish_explodes(self, fl):
+        raise RuntimeError("commit lost the result")
+
+    monkeypatch.setattr(DropService, "_finish", finish_explodes)
+    qid = svc2.submit(xs[0], CFG, zero_cost())
+    out2 = svc2.run()
+    assert [r.query_id for r in out2] == [qid]
+    assert out2[0].error and out2[0].error.startswith("scheduler:")
+    assert "commit lost the result" in out2[0].error
+    assert svc2.stats.failures == 1
+    assert svc2.backlog() == 0
+
+
 # ------------------------------------------- forced 2-device host platform
 
 PROG = r'''

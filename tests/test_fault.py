@@ -1,0 +1,169 @@
+"""Unit tests for the fault module: injector determinism, straggler
+windows, restart budget + backoff. These are the primitives the serving
+fleet's supervisor composes, so they get direct coverage here (the
+end-to-end chaos paths live in test_fleet.py)."""
+
+import pytest
+
+from repro.fault.faults import (
+    FailureInjector,
+    NodeFailure,
+    RestartPolicy,
+    StragglerMonitor,
+)
+
+
+# ------------------------------------------------------------- injector
+
+
+def test_injector_deterministic_per_seed():
+    """Same seed -> identical failure schedule; different seed -> (almost
+    surely) a different one. The fleet relies on this to make chaos tests
+    reproducible."""
+
+    def schedule(seed, steps=200, p=0.1):
+        inj = FailureInjector(failure_prob=p, seed=seed)
+        failed = []
+        for s in range(steps):
+            try:
+                inj.maybe_fail(s)
+            except NodeFailure:
+                failed.append(s)
+        return failed
+
+    a = schedule(7)
+    b = schedule(7)
+    c = schedule(8)
+    assert a == b
+    assert a, "p=0.1 over 200 steps should inject at least once"
+    assert a != c
+
+
+def test_injector_zero_prob_never_fires():
+    inj = FailureInjector(failure_prob=0.0, seed=0)
+    for s in range(100):
+        inj.maybe_fail(s)
+    assert inj.injected == 0
+
+
+def test_injector_counts_injections():
+    inj = FailureInjector(failure_prob=1.0, seed=0)
+    with pytest.raises(NodeFailure):
+        inj.maybe_fail(0)
+    with pytest.raises(NodeFailure):
+        inj.maybe_fail(1)
+    assert inj.injected == 2
+
+
+# ------------------------------------------------------------ straggler
+
+
+def test_straggler_warmup_never_flags():
+    """Fewer than 5 historical samples -> no flagging, no matter how slow."""
+    mon = StragglerMonitor()
+    for step in range(5):
+        assert mon.observe(step, 100.0) is False
+    assert mon.flagged_steps == []
+
+
+def test_straggler_flags_and_escalates():
+    mon = StragglerMonitor(deadline_factor=3.0, tolerance=3)
+    for step in range(10):
+        mon.observe(step, 1.0)
+    # 10x the median: each observation flags and builds the streak
+    flagged = [mon.observe(10 + i, 10.0) for i in range(3)]
+    assert flagged == [True, True, True]
+    assert mon.flagged_steps == [10, 11, 12]
+    assert mon.should_escalate
+    # one healthy step resets the streak (but not the flag history)
+    assert mon.observe(13, 1.0) is False
+    assert not mon.should_escalate
+    assert mon.flagged_steps == [10, 11, 12]
+
+
+def test_straggler_median_is_rolling():
+    """The median comes from the trailing window only: a regime change
+    (permanently slower steps) stops flagging once the window refills."""
+    mon = StragglerMonitor(deadline_factor=3.0, window=8)
+    for step in range(8):
+        mon.observe(step, 1.0)
+    assert mon.observe(8, 10.0) is True  # vs median 1.0
+    for step in range(9, 9 + 8):
+        mon.observe(step, 10.0)  # new normal fills the window
+    assert mon.observe(17, 10.0) is False  # vs median 10.0
+
+
+def test_straggler_times_bounded_by_window():
+    """A long-lived supervisor observes forever; the sample list must not
+    grow without bound."""
+    mon = StragglerMonitor(window=16)
+    for step in range(10_000):
+        mon.observe(step, 1.0)
+    assert len(mon._times) == 16
+
+
+# -------------------------------------------------------------- restart
+
+
+def test_restart_policy_counts_and_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise NodeFailure("boom")
+
+    assert RestartPolicy(max_restarts=5).run(flaky) == 2
+    assert calls["n"] == 3
+
+
+def test_restart_policy_exhaustion_reraises():
+    def always_fails():
+        raise NodeFailure("boom")
+
+    policy = RestartPolicy(max_restarts=2)
+    with pytest.raises(NodeFailure):
+        policy.run(always_fails)
+
+
+def test_restart_policy_only_catches_node_failure():
+    def other_error():
+        raise ValueError("not a node failure")
+
+    with pytest.raises(ValueError):
+        RestartPolicy(max_restarts=5).run(other_error)
+
+
+def test_restart_delay_doubles_and_caps():
+    policy = RestartPolicy(backoff_s=0.5, backoff_cap_s=3.0)
+    assert policy.delay(1) == 0.5
+    assert policy.delay(2) == 1.0
+    assert policy.delay(3) == 2.0
+    assert policy.delay(4) == 3.0  # 4.0 capped
+    assert policy.delay(10) == 3.0
+
+
+def test_restart_delay_disabled_by_default():
+    policy = RestartPolicy()
+    assert policy.backoff_s == 0.0
+    for n in range(1, 8):
+        assert policy.delay(n) == 0.0
+    assert policy.delay(0) == 0.0  # 0-based callers get no sleep either
+
+
+def test_restart_run_sleeps_between_restarts(monkeypatch):
+    """run() consumes delay(): the sleep sequence is the doubling ladder."""
+    import repro.fault.faults as faults_mod
+
+    slept = []
+    monkeypatch.setattr(faults_mod.time, "sleep", slept.append)
+    calls = {"n": 0}
+
+    def fails_thrice():
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise NodeFailure("boom")
+
+    policy = RestartPolicy(max_restarts=5, backoff_s=0.1, backoff_cap_s=0.15)
+    assert policy.run(fails_thrice) == 3
+    assert slept == [0.1, 0.15, 0.15]

@@ -1,0 +1,253 @@
+"""Process-worker serving fleet: protocol units, supervised round trips,
+crash/restart fault handling, chaos injection, and measured placement.
+
+Every blocking wait here carries a timeout — the whole point of the
+supervisor is that a dead worker can never hang a client, so a hang IS
+the failure mode under test."""
+
+import io
+import os
+import pickle
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DropConfig
+from repro.core.cost import CostModel, knn_cost
+from repro.data import sinusoid_mixture
+from repro.serve_drop import DropService, FleetSupervisor, IngestFrontend
+from repro.serve_drop.fleet import (
+    _cost_from_spec,
+    _cost_spec,
+    _recv_frame,
+    _send_frame,
+)
+
+CFG = DropConfig(target_tlb=0.9, seed=0)
+
+
+def _datasets(n, rows=96, dim=12):
+    return [
+        sinusoid_mixture(rows, dim, rank=3 + i, seed=10 + i)[0]
+        for i in range(n)
+    ]
+
+
+def _wait(predicate, timeout_s=30.0, what="condition"):
+    deadline = time.perf_counter() + timeout_s
+    while not predicate():
+        if time.perf_counter() > deadline:
+            raise AssertionError(f"timed out waiting for {what}")
+        time.sleep(0.02)
+
+
+# ------------------------------------------------------------ pure units
+
+
+def test_frame_round_trip():
+    buf = io.BytesIO()
+    msgs = [
+        {"t": "q", "x": np.arange(6, dtype=np.float32).reshape(2, 3)},
+        {"t": "hb"},
+        {"t": "pong", "blob": b"\0" * 1000},
+    ]
+    for m in msgs:
+        _send_frame(buf, m)
+    buf.seek(0)
+    out = [_recv_frame(buf) for _ in msgs]
+    assert out[1] == {"t": "hb"}
+    np.testing.assert_array_equal(out[0]["x"], msgs[0]["x"])
+    assert out[2]["blob"] == msgs[2]["blob"]
+    assert _recv_frame(buf) is None  # EOF, not an exception
+
+
+def test_frame_truncation_is_eof():
+    buf = io.BytesIO()
+    _send_frame(buf, {"t": "q", "payload": b"\0" * 500})
+    data = buf.getvalue()
+    assert _recv_frame(io.BytesIO(data[: len(data) - 7])) is None
+
+
+def test_cost_spec_named_and_rejected():
+    assert _cost_spec(None) is None
+    assert _cost_spec(knn_cost(64)) == "knn"
+    rebuilt = _cost_from_spec("knn", 64)
+    assert rebuilt.name == "knn"
+    # an anonymous closure cannot cross the process boundary
+    custom = CostModel(name="custom", fn=lambda k: 0.0)
+    with pytest.raises(ValueError, match="downstream"):
+        _cost_spec(custom)
+    # but a genuinely picklable object rides along as-is
+    kind, obj = _cost_spec((1, 2, 3))
+    assert kind == "pickled"
+    assert _cost_from_spec((kind, obj), 10) == (1, 2, 3)
+    assert pickle.dumps(obj)
+
+
+# ------------------------------------------------------- supervised serve
+
+
+def test_fleet_round_trip_matches_inprocess():
+    """Two workers serve three tenants; per-query k matches the in-process
+    service (same scheduler inside every worker)."""
+    datasets = _datasets(3)
+
+    svc = DropService()
+    for x in datasets:
+        svc.submit(x, CFG, downstream="knn")
+    expect = {r.query_id: r.result.k for r in svc.run()}
+
+    with FleetSupervisor(workers=2, profile=False) as fleet:
+        qids = [fleet.submit(x, CFG, downstream="knn") for x in datasets]
+        results = fleet.run(timeout=180)
+    assert [r.query_id for r in results] == sorted(qids)
+    assert all(r.error is None for r in results)
+    assert [r.result.k for r in results] == [expect[q] for q in sorted(expect)]
+    assert {r.worker for r in results} <= {"worker-0", "worker-1"}
+    assert fleet.stats.queries == 3
+    assert fleet.stats.worker_deaths == 0
+
+
+def test_fleet_worker_cache_serves_repeats():
+    x = _datasets(1)[0]
+    with FleetSupervisor(workers=1, profile=False) as fleet:
+        first = fleet.result(fleet.submit(x, CFG), timeout=120)
+        second = fleet.result(fleet.submit(x, CFG), timeout=120)
+    assert first.error is None and second.error is None
+    assert not first.cache_hit
+    assert second.cache_hit  # the worker's own BasisReuseCache hit
+    assert second.worker == first.worker  # sticky tenant home
+    assert fleet.stats.cache_hits == 1
+
+
+def test_fleet_kill9_requeues_restarts_and_completes():
+    """The acceptance scenario: kill -9 a worker mid-serve. Its in-flight
+    queries must finish on a survivor (retried, not errored), the slot must
+    restart within the RestartPolicy bounds, and nothing may hang."""
+    datasets = _datasets(4)
+    with FleetSupervisor(
+        workers=2,
+        profile=False,
+        placement="rr",
+        worker_slowdowns=[2.0, 0.0],  # holds worker-0's queries in flight
+    ) as fleet:
+        qids = [fleet.submit(x, CFG) for x in datasets]
+        w0 = fleet._workers[0]
+        _wait(lambda: w0.assigned, what="worker-0 to hold in-flight work")
+        time.sleep(0.3)  # let it enter its slowdown sleep
+        os.kill(w0.proc.pid, signal.SIGKILL)
+
+        results = {r.query_id: r for r in fleet.run(timeout=180)}
+        assert sorted(results) == sorted(qids)
+        assert all(r.error is None for r in results.values())
+        assert any(r.retries > 0 for r in results.values())
+        assert fleet.stats.worker_deaths == 1
+        assert fleet.stats.requeued_queries >= 1
+
+        # the slot comes back under the restart policy...
+        _wait(
+            lambda: fleet.stats.worker_restarts >= 1
+            and fleet._workers[0].state == "ready",
+            what="worker-0 restart",
+        )
+        # ...and serves again
+        res = fleet.result(fleet.submit(_datasets(1)[0], CFG), timeout=120)
+        assert res.error is None
+
+
+def test_fleet_retry_exhaustion_errors_instead_of_hanging():
+    """With no retry budget and no survivor to absorb the work, the killed
+    worker's query must FINISH — with ServeResult.error — not hang."""
+    x = _datasets(1)[0]
+    with FleetSupervisor(
+        workers=1,
+        profile=False,
+        max_query_retries=0,
+        worker_slowdowns=[5.0],
+    ) as fleet:
+        qid = fleet.submit(x, CFG)
+        w0 = fleet._workers[0]
+        _wait(lambda: w0.assigned, what="query in flight")
+        time.sleep(0.2)
+        os.kill(w0.proc.pid, signal.SIGKILL)
+        res = fleet.result(qid, timeout=60)
+    assert res.error is not None
+    assert "worker-0" in res.error and "retries exhausted" in res.error
+    assert res.retries == 1
+    assert res.result.k == 0 and not res.result.satisfied
+    assert fleet.stats.failures == 1
+
+
+def test_fleet_chaos_injected_failures_all_queries_complete():
+    """FailureInjector-driven crashes (os._exit inside the worker) walk the
+    same death->requeue->restart ladder as a real kill; every query still
+    gets a result."""
+    datasets = _datasets(4)
+    with FleetSupervisor(
+        workers=2,
+        profile=False,
+        placement="rr",
+        failure_prob=0.6,
+        failure_seed=0,
+        restart_policy=None,  # default: 3 restarts, 50ms base backoff
+    ) as fleet:
+        qids = [fleet.submit(x, CFG) for x in datasets]
+        results = {r.query_id: r for r in fleet.run(timeout=240)}
+    assert sorted(results) == sorted(qids)  # nothing lost, nothing hung
+    assert fleet.stats.worker_deaths >= 1  # p=0.6 x 4 queries: certain
+    assert fleet.stats.worker_restarts >= 1
+    # queries either survived a retry or were errored out by exhaustion —
+    # both count as "finished"; a hang would have tripped the run timeout
+    assert all(
+        (r.error is None) or ("retries exhausted" in r.error)
+        for r in results.values()
+    )
+
+
+# ------------------------------------------------------------- placement
+
+
+def test_fleet_rebalance_moves_tenant_off_congested_slow_worker():
+    """Measured-cost placement: a tenant whose home worker is slow (and
+    holding a queue) moves to the faster idle worker; the supervisor's
+    speed estimate for the slow worker degrades from observed serve
+    times."""
+    x = _datasets(1)[0]
+    with FleetSupervisor(
+        workers=2,
+        profile=False,  # equal priors: placement starts index-tied
+        placement="cost",
+        worker_slowdowns=[1.0, 0.0],
+    ) as fleet:
+        # burst of one tenant: q1 homes on worker-0 (index tiebreak); with
+        # q1 still queued there, worker-1 is decisively cheaper for q2
+        q1 = fleet.submit(x, CFG)
+        q2 = fleet.submit(x, CFG)
+        r1 = fleet.result(q1, timeout=120)
+        r2 = fleet.result(q2, timeout=120)
+        assert fleet.stats.rebalances >= 1
+        assert r1.worker == "worker-0"
+        assert r2.worker == "worker-1"
+        # home moved: later queries stay on the fast worker
+        r3 = fleet.result(fleet.submit(x, CFG), timeout=120)
+        assert r3.worker == "worker-1"
+        speeds = fleet.worker_speeds()
+        assert speeds["worker-0"] < speeds["worker-1"]
+    assert r1.error is None and r2.error is None and r3.error is None
+
+
+# ---------------------------------------------------------- ingest bridge
+
+
+def test_ingest_frontend_over_fleet():
+    """The async front-end treats the supervisor as just another service:
+    submit from the client thread, block on result, close() drains."""
+    datasets = _datasets(2)
+    fleet = FleetSupervisor(workers=2, profile=False)
+    with fleet, IngestFrontend(fleet, queue_capacity=8) as fe:
+        qids = [fe.submit(x, CFG) for x in datasets]
+        results = [fe.result(q, timeout=120) for q in qids]
+    assert all(r.error is None for r in results)
+    assert all(r.worker in ("worker-0", "worker-1") for r in results)
