@@ -13,8 +13,17 @@ settle allocator/cache state), then best-of-N. DROP itself is never
 invoked here, so no ``min_iterations`` pinning applies — the inputs are
 seeded raw matrices shared bit-for-bit by both legs.
 
+``--split`` adds the flash-decoding-style split-scan legs
+(``analytics.split``): the same tasks at 1 vs N dataset shards, via the
+same public wrappers (``split=s``). The merges are exact, so the legs
+measure pure decomposition overhead/benefit; like the fleet-scaling bench,
+any speedup is core-bound (the shard axis is data-parallel inside one XLA
+dispatch) and the record carries a ``cores=`` caveat — on a single-core
+container the comparison measures split overhead only.
+
     python benchmarks/bench_pairwise_analytics.py
     python benchmarks/bench_pairwise_analytics.py --rows 8000 --dims 3,25,95
+    python benchmarks/bench_pairwise_analytics.py --split 1,2
     python benchmarks/bench_pairwise_analytics.py --json pairwise.json  # CI
 """
 
@@ -111,6 +120,65 @@ def measure(
     return rec
 
 
+def measure_split(
+    rows: int = 8000,
+    dims: tuple = (3, 25),
+    tasks: tuple = TASKS,
+    shards: tuple = (1, 2),
+    iters: int = 3,
+    seed: int = 0,
+) -> dict:
+    """Sequential scan vs the split fan-out at each shard count, through
+    the public wrappers (``split=s``; exact merges — identical outputs).
+    Speedup is core-bound: the shard axis is data-parallel inside one
+    dispatch, so a 1-core host can only measure the split's overhead."""
+    import numpy as np
+
+    from repro.analytics import dbscan, gaussian_kde, nearest_neighbors
+
+    cores = (
+        len(os.sched_getaffinity(0))
+        if hasattr(os, "sched_getaffinity")
+        else (os.cpu_count() or 1)
+    )
+    rec = {
+        "rows": rows,
+        "seed": seed,
+        "cores": cores,
+        "note": (
+            f"split legs are core-bound (data-parallel shard axis); "
+            f"cores={cores} — expect sequential-comparable times, not "
+            f"speedup, below 2 cores"
+        ),
+        "tasks": {t: {} for t in tasks},
+    }
+    rng = np.random.default_rng(seed)
+    for d in dims:
+        x = rng.normal(size=(rows, d)).astype(np.float32)
+        legs = {}
+        if "knn" in tasks:
+            legs["knn"] = lambda s, x=x: nearest_neighbors(x, split=s)
+        if "dbscan" in tasks:
+            eps = _eps_for(x, seed=seed)
+            legs["dbscan"] = lambda s, x=x, e=eps: dbscan(
+                x, eps=e, min_samples=5, split=s
+            )
+        if "kde" in tasks:
+            legs["kde"] = lambda s, x=x: gaussian_kde(x, split=s)
+        for task, leg in legs.items():
+            entry = {
+                "seq_ms": round(
+                    _time_best(lambda: leg(None), iters) * 1e3, 1
+                )
+            }
+            for s in shards:
+                entry[f"split{s}_ms"] = round(
+                    _time_best(lambda s=s: leg(s), iters) * 1e3, 1
+                )
+            rec["tasks"][task][f"d{d}"] = entry
+    return rec
+
+
 def run(full: bool = False) -> list:
     """Harness rows (benchmarks/run.py integration). The small path keeps
     the whole module CI-sized; --full runs the acceptance shape m=8000."""
@@ -142,6 +210,10 @@ def main() -> None:
     ap.add_argument("--tasks", type=str, default="knn,dbscan,kde")
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--split", type=str, default=None,
+                    help="comma list of shard counts: add split-scan legs "
+                         "(sequential vs analytics.split at each count; "
+                         "core-bound — see module docstring)")
     ap.add_argument("--json", type=str, default=None,
                     help="write the record as JSON (nightly CI artifact)")
     args = ap.parse_args()
@@ -153,6 +225,15 @@ def main() -> None:
         iters=args.iters,
         seed=args.seed,
     )
+    if args.split:
+        rec["split"] = measure_split(
+            rows=args.rows,
+            dims=tuple(int(d) for d in args.dims.split(",")),
+            tasks=tuple(t.strip() for t in args.tasks.split(",")),
+            shards=tuple(int(s) for s in args.split.split(",")),
+            iters=args.iters,
+            seed=args.seed,
+        )
     print(f"pairwise analytics: m={rec['rows']} (fused engine vs legacy "
           f"host loop, warm x2, best-of-{args.iters})")
     for task, by_d in rec["tasks"].items():
@@ -161,6 +242,18 @@ def main() -> None:
                   f"fused={leg['fused_ms']:8.1f}ms  "
                   f"legacy={leg['legacy_ms']:8.1f}ms  "
                   f"speedup={leg['speedup']:5.2f}x")
+    if args.split:
+        sp = rec["split"]
+        print(f"split scan (exact merges; {sp['note']})")
+        for task, by_d in sp["tasks"].items():
+            for dkey, leg in by_d.items():
+                splits = "  ".join(
+                    f"{k.removesuffix('_ms')}={v:.1f}ms"
+                    for k, v in leg.items()
+                    if k.startswith("split")
+                )
+                print(f"  {task:6s} {dkey:>4s}  "
+                      f"seq={leg['seq_ms']:8.1f}ms  {splits}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rec, f, indent=2)

@@ -17,3 +17,11 @@ from repro.analytics.pairwise import (  # noqa: F401
     pairwise_knn,
     unpack_neighbors,
 )
+from repro.analytics.split import (  # noqa: F401
+    merge_dbscan_partials,
+    merge_kde_partials,
+    merge_knn_partials,
+    split_pairwise_dbscan,
+    split_pairwise_kde,
+    split_pairwise_knn,
+)

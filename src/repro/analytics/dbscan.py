@@ -96,14 +96,29 @@ def dbscan(
     block: int = 1024,
     *,
     use_kernels: bool = False,
+    split: int | None = None,
+    fanout: str = "xla",
+    devices=None,
 ) -> np.ndarray:
-    """Cluster labels per point; -1 = noise. One fused device scan."""
+    """Cluster labels per point; -1 = noise. One fused device scan.
+
+    ``split=N`` shards the device scan (``analytics.split``); counts and
+    packed bitmasks merge bit-identically, so the BFS — and every
+    traversal-order-dependent border label — is unchanged."""
     from repro.analytics.pairwise import NeighborDecoder, pairwise_dbscan
 
     m = x.shape[0]
-    counts, packed = pairwise_dbscan(
-        x, eps, block, block, use_kernels=use_kernels
-    )
+    if split is not None or fanout == "mesh":
+        from repro.analytics.split import split_pairwise_dbscan
+
+        counts, packed = split_pairwise_dbscan(
+            x, eps, shards=split or 1, block_q=block, block_k=block,
+            use_kernels=use_kernels, fanout=fanout, devices=devices,
+        )
+    else:
+        counts, packed = pairwise_dbscan(
+            x, eps, block, block, use_kernels=use_kernels
+        )
     return _bfs(m, min_samples, counts, NeighborDecoder(packed, m))
 
 

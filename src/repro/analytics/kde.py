@@ -45,8 +45,22 @@ def gaussian_kde(
     block: int = 1024,
     *,
     use_kernels: bool = False,
+    split: int | None = None,
+    fanout: str = "xla",
+    devices=None,
 ) -> np.ndarray:
-    """Mean Gaussian kernel density at each query point (unnormalized)."""
+    """Mean Gaussian kernel density at each query point (unnormalized).
+
+    ``split=N`` shards the exp-sum (``analytics.split``); compensated
+    partials folded in float64 keep densities split-point independent."""
+    if split is not None or fanout == "mesh":
+        from repro.analytics.split import split_pairwise_kde
+
+        return split_pairwise_kde(
+            x, queries, bandwidth, shards=split or 1,
+            block_q=block, block_k=block,
+            use_kernels=use_kernels, fanout=fanout, devices=devices,
+        )
     from repro.analytics.pairwise import pairwise_kde
 
     return pairwise_kde(

@@ -92,9 +92,27 @@ def nearest_neighbors_legacy(x: np.ndarray, block: int = 1024) -> np.ndarray:
 
 
 def nearest_neighbors(
-    x: np.ndarray, block: int = 1024, *, use_kernels: bool = False
+    x: np.ndarray,
+    block: int = 1024,
+    *,
+    use_kernels: bool = False,
+    split: int | None = None,
+    fanout: str = "xla",
+    devices=None,
 ) -> np.ndarray:
-    """Index of the nearest other point for every row — one fused scan."""
+    """Index of the nearest other point for every row — one fused scan.
+
+    ``split=N`` runs the dataset axis as N flash-decoding-style shards
+    (``fanout="mesh"`` fans them across devices); results are bit-identical
+    to the sequential scan for every shard count (``analytics.split``)."""
+    if split is not None or fanout == "mesh":
+        from repro.analytics.split import split_pairwise_knn
+
+        idx, _ = split_pairwise_knn(
+            x, shards=split or 1, block_q=block, block_k=block,
+            use_kernels=use_kernels, fanout=fanout, devices=devices,
+        )
+        return idx
     from repro.analytics.pairwise import pairwise_knn
 
     idx, _ = pairwise_knn(x, block, block, use_kernels=use_kernels)
@@ -107,7 +125,13 @@ def knn_retrieval_accuracy(
     block: int = 1024,
     *,
     use_kernels: bool = False,
+    split: int | None = None,
+    fanout: str = "xla",
+    devices=None,
 ) -> float:
     """Label agreement rate of 1-NN retrieval (paper Table 2/4 metric)."""
-    nn = nearest_neighbors(x, block=block, use_kernels=use_kernels)
+    nn = nearest_neighbors(
+        x, block=block, use_kernels=use_kernels,
+        split=split, fanout=fanout, devices=devices,
+    )
     return float((labels[nn] == labels).mean())

@@ -95,12 +95,14 @@ def _pad_rows(x: np.ndarray, rows: int) -> np.ndarray:
 DIRECT_D_MAX = 4
 
 
-def _tile_d2(xqt, sq_q, x, sq_x, j, bk, m):
+def _tile_d2(xqt, sq_q, x, sq_x, j, bk, m, col_offset):
     """One (bq, bk) squared-distance tile with padded dataset columns masked
-    to +inf. Returns (d2, cols) — cols are GLOBAL dataset indices."""
+    to +inf. Returns (d2, cols) — cols are GLOBAL dataset indices
+    (``col_offset`` shifts local tile columns to global when ``x`` is one
+    shard of a split dataset; the sequential scan passes 0)."""
     d = x.shape[1]
     xt = lax.dynamic_slice(x, (j * bk, 0), (bk, d))
-    cols = j * bk + jnp.arange(bk)
+    cols = col_offset + j * bk + jnp.arange(bk)
     if d <= DIRECT_D_MAX:
         # unrolled sum_j (q_j - x_j)^2: pure VPU, no degenerate gemm
         d2 = jnp.zeros((xqt.shape[0], bk), jnp.float32)
@@ -155,26 +157,31 @@ def _pack_bits(mask: jax.Array) -> jax.Array:
     return jnp.sum(u * weights[None, None, :], axis=-1, dtype=jnp.uint32)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("task", "bq", "bk", "use_top_k"),
-)
-def _fused_scan(
-    xq: jax.Array,  # (nq*bq, d) padded queries
-    x: jax.Array,  # (nk*bk, d) padded dataset
-    m: jax.Array,  # true dataset row count (traced: buckets share compiles)
+def _scan_core(
+    xq: jax.Array,  # (nq*bq, d) padded queries (or one query shard)
+    x: jax.Array,  # (nk*bk, d) padded dataset (or one dataset shard)
+    m: jax.Array,  # true GLOBAL dataset row count (traced)
     scalar: jax.Array,  # task scalar: eps^2 (dbscan) / 1/(2h^2) (kde) / 0
+    col_offset: jax.Array,  # global index of x's first row (traced int32)
+    row_offset: jax.Array,  # global index of xq's first row (traced int32)
+    *,
     task: str,
     bq: int,
     bk: int,
     use_top_k: bool,
 ):
-    """The whole pairwise scan as ONE device computation.
+    """The tiled pairwise scan over one (query shard, dataset shard) pair.
+
+    This is the shared body behind the sequential ``_fused_scan`` (offsets
+    0) and the split/mesh paths in ``analytics.split`` (each shard passes
+    its global offsets, producing a PARTIAL carry that merges exactly —
+    see the split-scan contract in ``analytics/README.md``).
 
     Returns per task:
       knn    -> (nn_idx  (nq*bq,) int32,  nn_d2  (nq*bq,) float32)
       dbscan -> (counts  (nq*bq,) int32,  packed (nq*bq, nk*bk/32) uint32)
-      kde    -> (sums    (nq*bq,) float32,)   [caller divides by m]
+      kde    -> (sums (nq*bq,) f32, comps (nq*bq,) f32)  [compensated pair;
+                caller folds ``sums + comps`` in float64 and divides by m]
     """
     mq_pad, d = xq.shape
     nk = x.shape[0] // bk
@@ -186,12 +193,12 @@ def _fused_scan(
         sq_q = jnp.sum(xqt * xqt, axis=1, keepdims=True)
         # kNN queries ARE the dataset rows, so the global query index doubles
         # as the self column to exclude (kde/dbscan never read `rows`)
-        rows = a + jnp.arange(bq)
+        rows = row_offset + a + jnp.arange(bq)
 
         if task == "knn":
 
             def k_body(j, carry):
-                d2, cols = _tile_d2(xqt, sq_q, x, sq_x, j, bk, m)
+                d2, cols = _tile_d2(xqt, sq_q, x, sq_x, j, bk, m, col_offset)
                 return _knn_tile(carry, d2, cols, rows, use_top_k)
 
             init = (
@@ -209,7 +216,9 @@ def _fused_scan(
 
             def k_body(j, carry):
                 counts, packed_row = carry
-                d2, _cols = _tile_d2(xqt, sq_q, x, sq_x, j, bk, m)
+                d2, _cols = _tile_d2(
+                    xqt, sq_q, x, sq_x, j, bk, m, col_offset
+                )
                 mask = d2 <= scalar  # self included (d2=0); host drops it
                 counts = counts + jnp.sum(mask, axis=1, dtype=jnp.int32)
                 packed_row = lax.dynamic_update_slice(
@@ -228,17 +237,38 @@ def _fused_scan(
                 lax.dynamic_update_slice(packed_out, packed_row, (a, 0)),
             )
 
-        # kde: running exp-sum (padded columns are masked, not exp(-inf),
-        # so a zero bandwidth scalar can never produce inf*0 = nan)
-        def k_body(j, acc):
-            d2, cols = _tile_d2(xqt, sq_q, x, sq_x, j, bk, m)
+        # kde: compensated (Neumaier) running exp-sum. A plain f32 running
+        # sum swallows low-order tile contributions once the accumulator
+        # grows (and makes per-shard partials depend on the split point);
+        # carrying the rounding error in a second f32 keeps ~f64 accuracy
+        # while staying in the backend's native width (jax x64 is off, so a
+        # float64 carry would silently degrade back to f32 anyway). Padded
+        # columns are masked, not exp(-inf), so a zero bandwidth scalar can
+        # never produce inf*0 = nan.
+        def k_body(j, carry):
+            acc, comp = carry
+            d2, cols = _tile_d2(xqt, sq_q, x, sq_x, j, bk, m, col_offset)
             e = jnp.exp(-jnp.maximum(d2, 0.0) * scalar)
             e = jnp.where(cols[None, :] < m, e, 0.0)
-            return acc + jnp.sum(e, axis=1)
+            t = jnp.sum(e, axis=1)
+            s = acc + t
+            comp = comp + jnp.where(
+                jnp.abs(acc) >= jnp.abs(t),
+                (acc - s) + t,  # low-order bits of t lost in the add
+                (t - s) + acc,  # (tile sum larger: symmetric form)
+            )
+            return s, comp
 
-        sums = lax.fori_loop(0, nk, k_body, jnp.zeros((bq,), jnp.float32))
-        (sums_out,) = out
-        return (lax.dynamic_update_slice(sums_out, sums, (a,)),)
+        kinit = (
+            jnp.zeros((bq,), jnp.float32),
+            jnp.zeros((bq,), jnp.float32),
+        )
+        sums, comps = lax.fori_loop(0, nk, k_body, kinit)
+        sums_out, comps_out = out
+        return (
+            lax.dynamic_update_slice(sums_out, sums, (a,)),
+            lax.dynamic_update_slice(comps_out, comps, (a,)),
+        )
 
     if task == "knn":
         init = (
@@ -251,18 +281,55 @@ def _fused_scan(
             jnp.zeros((mq_pad, (x.shape[0] // bk) * (bk // 32)), jnp.uint32),
         )
     else:
-        init = (jnp.zeros((mq_pad,), jnp.float32),)
+        init = (
+            jnp.zeros((mq_pad,), jnp.float32),
+            jnp.zeros((mq_pad,), jnp.float32),
+        )
     return lax.fori_loop(0, mq_pad // bq, q_body, init)
 
 
+@partial(
+    jax.jit,
+    static_argnames=("task", "bq", "bk", "use_top_k"),
+)
+def _fused_scan(
+    xq: jax.Array,
+    x: jax.Array,
+    m: jax.Array,
+    scalar: jax.Array,
+    task: str,
+    bq: int,
+    bk: int,
+    use_top_k: bool,
+):
+    """The whole SEQUENTIAL pairwise scan as one device computation (the
+    split/mesh variants live in ``analytics.split``; output contract is
+    ``_scan_core``'s with both offsets zero)."""
+    zero = jnp.int32(0)
+    return _scan_core(
+        xq, x, m, scalar, zero, zero,
+        task=task, bq=bq, bk=bk, use_top_k=use_top_k,
+    )
+
+
 def _clamp_block(block: int, rows: int, word: int = 64) -> int:
-    """Shrink a tile to the data: a 300-row input under the default 1024
-    block would otherwise pad to (and scan) 1024 rows. Quantized to
-    ``word`` so small-m compiles stay bucketed (and, at 64, packed words
-    always divide the dataset tile)."""
+    """Validate and shrink a tile to the data: a 300-row input under the
+    default 1024 block would otherwise pad to (and scan) 1024 rows.
+
+    EVERY accepted block is quantized to a multiple of ``word`` — including
+    caller-supplied ones, which are rounded UP. The bitmask packer reshapes
+    dataset tiles to ``(bq, bk // 32, 32)``, so a bk like 100 used to crash
+    with an opaque reshape error deep inside jit; now it runs at 128, and a
+    non-positive/non-integral block fails here with a clear message."""
     from repro.core.bucketing import round_up
 
-    return max(word, min(int(block), round_up(rows, word)))
+    if block != int(block) or int(block) < 1:
+        raise ValueError(
+            f"block size must be a positive integer, got {block!r}; "
+            f"pairwise tiles are quantized to multiples of {word} "
+            "(the packed-bitmask word granularity)"
+        )
+    return max(word, min(round_up(int(block), word), round_up(rows, word)))
 
 
 def _prepare(
@@ -401,9 +468,9 @@ def pairwise_kde(
     if use_kernels and _kernel_backend_live():
         from repro.kernels.pairwise_reduce.ops import pairwise_kde_reduce
 
-        sums = pairwise_kde_reduce(xq_pad, xk_pad, m, inv)
+        sums, comps = pairwise_kde_reduce(xq_pad, xk_pad, m, inv)
     else:
-        (sums,) = _fused_scan(
+        sums, comps = _fused_scan(
             jnp.asarray(xq_pad),
             jnp.asarray(xk_pad),
             jnp.int32(m),
@@ -413,8 +480,23 @@ def pairwise_kde(
             bk=block_k,
             use_top_k=False,
         )
-    sums = jax.device_get(sums)
-    return np.asarray(sums)[:mq] / np.float32(m)
+    sums, comps = jax.device_get((sums, comps))
+    return kde_from_compensated(
+        np.asarray(sums)[None, :mq], np.asarray(comps)[None, :mq], m
+    )
+
+
+def kde_from_compensated(
+    sums: np.ndarray, comps: np.ndarray, m: int
+) -> np.ndarray:
+    """Fold (S, mq) per-shard compensated exp-sum pairs into densities.
+
+    The device carries (sum, comp) in f32; the exact value of each partial
+    is ``sum + comp``. Folding shards and the final mean in float64 on the
+    host makes the result independent of the split point to ~f32 ulp (the
+    shard combine is the associative piece; see analytics/README.md)."""
+    total = (sums.astype(np.float64) + comps.astype(np.float64)).sum(axis=0)
+    return (total / float(m)).astype(np.float32)
 
 
 def unpack_neighbors(packed_row: np.ndarray, p: int, m: int) -> np.ndarray:

@@ -15,15 +15,23 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import kernel_backend_live
+import jax.numpy as jnp
+
 from repro.kernels.pairwise_reduce.pairwise_reduce import (
     pairwise_dbscan_pallas,
+    pairwise_dbscan_split_pallas,
     pairwise_kde_pallas,
+    pairwise_kde_split_pallas,
     pairwise_knn_pallas,
+    pairwise_knn_split_pallas,
 )
 from repro.kernels.pairwise_reduce.ref import (
     pairwise_dbscan_ref,
+    pairwise_dbscan_split_ref,
     pairwise_kde_ref,
+    pairwise_kde_split_ref,
     pairwise_knn_ref,
+    pairwise_knn_split_ref,
 )
 
 
@@ -50,10 +58,60 @@ def pairwise_dbscan_reduce(
 def pairwise_kde_reduce(
     xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float, **kw
 ):
+    """Returns the compensated (sums, comps) pair; the ref oracle's
+    one-shot sums carry zero compensation."""
     if jax.default_backend() == "tpu":
         return pairwise_kde_pallas(xq, x, m, float(inv_two_h2), **kw)
     if kernel_backend_live():
         return pairwise_kde_pallas(
             xq, x, m, float(inv_two_h2), interpret=True, **kw
         )
-    return pairwise_kde_ref(xq, x, m, float(inv_two_h2))
+    sums = pairwise_kde_ref(xq, x, m, float(inv_two_h2))
+    return sums, jnp.zeros_like(sums)
+
+
+# ------------------------------------------------------------ split variants
+# Per-shard partial reductions (leading shard axis in the grid), merged on
+# the host by ``analytics.split.merge_*_partials``. ``x`` arrives
+# shard-padded: (shards * shard_rows, d), shard_rows a multiple of the
+# dataset tile.
+
+
+def pairwise_knn_split_reduce(
+    xq: jax.Array, x: jax.Array, m: int, shards: int, **kw
+):
+    if jax.default_backend() == "tpu":
+        return pairwise_knn_split_pallas(xq, x, m, shards, **kw)
+    if kernel_backend_live():
+        return pairwise_knn_split_pallas(
+            xq, x, m, shards, interpret=True, **kw
+        )
+    return pairwise_knn_split_ref(xq, x, m, shards)
+
+
+def pairwise_dbscan_split_reduce(
+    xq: jax.Array, x: jax.Array, m: int, eps2: float, shards: int, **kw
+):
+    if jax.default_backend() == "tpu":
+        return pairwise_dbscan_split_pallas(
+            xq, x, m, float(eps2), shards, **kw
+        )
+    if kernel_backend_live():
+        return pairwise_dbscan_split_pallas(
+            xq, x, m, float(eps2), shards, interpret=True, **kw
+        )
+    return pairwise_dbscan_split_ref(xq, x, m, float(eps2), shards)
+
+
+def pairwise_kde_split_reduce(
+    xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float, shards: int, **kw
+):
+    if jax.default_backend() == "tpu":
+        return pairwise_kde_split_pallas(
+            xq, x, m, float(inv_two_h2), shards, **kw
+        )
+    if kernel_backend_live():
+        return pairwise_kde_split_pallas(
+            xq, x, m, float(inv_two_h2), shards, interpret=True, **kw
+        )
+    return pairwise_kde_split_ref(xq, x, m, float(inv_two_h2), shards)

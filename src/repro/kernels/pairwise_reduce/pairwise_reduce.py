@@ -10,7 +10,12 @@ mirroring ``kernels/pairwise_tlb``):
 * ``pairwise_knn_pallas``    — running (min-d2, argmin), self excluded;
 * ``pairwise_dbscan_pallas`` — eps-ball degree counts (carried) + packed
                                uint32 neighbor bitmasks (tile-local write);
-* ``pairwise_kde_pallas``    — running Gaussian exp-sum.
+* ``pairwise_kde_pallas``    — compensated (Neumaier) Gaussian exp-sum pair.
+
+Each kernel also has a ``*_split_pallas`` variant with a LEADING 'parallel'
+shard axis on the grid — the flash-decoding decomposition: per-shard
+partials with global column indices, merged exactly on the host by
+``analytics.split`` (see the split-scan contract in analytics/README.md).
 
 The true row count ``m`` and the task scalar (eps^2 / 1/(2h^2)) are STATIC:
 they bake the padding masks and threshold into the compiled kernel, keeping
@@ -34,9 +39,11 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.compat import CompilerParams
 
 
-def _tile_d2(xq_ref, x_ref, i, j, m, bq, bk):
+def _tile_d2(xq_ref, x_ref, row0, col0, m, bq, bk):
     """(bq, bk) squared-distance tile with global row/col ids; padded
-    dataset columns masked to +inf."""
+    dataset columns masked to +inf. ``row0``/``col0`` are the GLOBAL
+    indices of the tile's first row/column (``i*bq``/``j*bk`` on the
+    sequential grid; the split grid adds the shard offset to ``col0``)."""
     xqt = xq_ref[...].astype(jnp.float32)
     xt = x_ref[...].astype(jnp.float32)
     sq_q = jnp.sum(xqt * xqt, axis=1, keepdims=True)
@@ -44,31 +51,53 @@ def _tile_d2(xq_ref, x_ref, i, j, m, bq, bk):
     d2 = sq_q + sq_t[None, :] - 2.0 * jnp.dot(
         xqt, xt.T, preferred_element_type=jnp.float32
     )
-    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     d2 = jnp.where(cols >= m, jnp.inf, d2)
     return d2, rows, cols
 
 
-def _knn_kernel(xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx, *, m, bq, bk):
-    i, j = pl.program_id(0), pl.program_id(1)
+def _knn_body(xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx, row0, col0, j, m, bq, bk):
+    """Shared kNN tile fold: init at the first dataset tile, strict-``<``
+    merge (keeps the earlier tile on ties — first-occurrence argmin,
+    matching the jnp engine and the legacy global argmin exactly), write
+    the carry out every step (the final tile's write is the answer)."""
 
     @pl.when(j == 0)
     def _init():
         acc_d2[...] = jnp.full_like(acc_d2, jnp.inf)
         acc_idx[...] = jnp.zeros_like(acc_idx)
 
-    d2, rows, cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    d2, rows, cols = _tile_d2(xq_ref, x_ref, row0, col0, m, bq, bk)
     d2 = jnp.where(rows == cols, jnp.inf, d2)  # self excluded
     t_d2 = jnp.min(d2, axis=1, keepdims=True)
-    t_idx = (j * bk + jnp.argmin(d2, axis=1)[:, None]).astype(jnp.int32)
-    # strict < keeps the earlier tile on ties — first-occurrence argmin,
-    # matching the jnp engine and the legacy global argmin exactly
+    t_idx = (col0 + jnp.argmin(d2, axis=1)[:, None]).astype(jnp.int32)
     better = t_d2 < acc_d2[...]
     acc_d2[...] = jnp.where(better, t_d2, acc_d2[...])
     acc_idx[...] = jnp.where(better, t_idx, acc_idx[...])
-    idx_ref[...] = acc_idx[...]  # final j's write is the answer
+    idx_ref[...] = acc_idx[...]
     d2_ref[...] = acc_d2[...]
+
+
+def _knn_kernel(xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx, *, m, bq, bk):
+    i, j = pl.program_id(0), pl.program_id(1)
+    _knn_body(
+        xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx,
+        i * bq, j * bk, j, m, bq, bk,
+    )
+
+
+def _knn_split_kernel(
+    xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx, *, m, bq, bk, shard_rows
+):
+    """Grid-parallel split: leading shard axis, per-shard PARTIAL argmin
+    with GLOBAL column indices (col0 folds in the shard offset); the host
+    merges shards with ``analytics.split.merge_knn_partials``."""
+    s, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _knn_body(
+        xq_ref, x_ref, idx_ref, d2_ref, acc_d2, acc_idx,
+        i * bq, s * shard_rows + j * bk, j, m, bq, bk,
+    )
 
 
 def pack_bits_u32(mask: jax.Array) -> jax.Array:
@@ -83,32 +112,80 @@ def pack_bits_u32(mask: jax.Array) -> jax.Array:
     return jnp.sum(u * weights[None, None, :], axis=-1, dtype=jnp.uint32)
 
 
-def _dbscan_kernel(xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt, *, m, bq, bk, eps2):
-    i, j = pl.program_id(0), pl.program_id(1)
-
+def _dbscan_body(xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt, row0, col0, j, m, bq, bk, eps2):
     @pl.when(j == 0)
     def _init():
         acc_cnt[...] = jnp.zeros_like(acc_cnt)
 
-    d2, _rows, _cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    d2, _rows, _cols = _tile_d2(xq_ref, x_ref, row0, col0, m, bq, bk)
     mask = d2 <= eps2  # self included (d2=0); the host BFS drops it
     acc_cnt[...] += jnp.sum(mask, axis=1, keepdims=True, dtype=jnp.int32)
     cnt_ref[...] = acc_cnt[...]
     packed_ref[...] = pack_bits_u32(mask)
 
 
-def _kde_kernel(xq_ref, x_ref, out_ref, acc, *, m, bq, bk, inv_two_h2):
+def _dbscan_kernel(xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt, *, m, bq, bk, eps2):
     i, j = pl.program_id(0), pl.program_id(1)
+    _dbscan_body(
+        xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt,
+        i * bq, j * bk, j, m, bq, bk, eps2,
+    )
+
+
+def _dbscan_split_kernel(
+    xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt, *, m, bq, bk, eps2, shard_rows
+):
+    """Split variant: per-shard counts + tile-local packed segment writes;
+    shard boundaries are whole bk-tiles, so the segment word layout IS the
+    sequential one after shard-order concatenation."""
+    s, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _dbscan_body(
+        xq_ref, x_ref, cnt_ref, packed_ref, acc_cnt,
+        i * bq, s * shard_rows + j * bk, j, m, bq, bk, eps2,
+    )
+
+
+def _kde_body(xq_ref, x_ref, sum_ref, comp_ref, acc, comp, row0, col0, j, m, bq, bk, inv_two_h2):
+    """Compensated (Neumaier) exp-sum fold — carries the rounding error of
+    each tile add in a second f32 scratch, mirroring the jnp engine's carry
+    (see ``analytics.pairwise._scan_core``); the caller folds sum + comp in
+    float64 on the host."""
 
     @pl.when(j == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
+        comp[...] = jnp.zeros_like(comp)
 
-    d2, _rows, cols = _tile_d2(xq_ref, x_ref, i, j, m, bq, bk)
+    d2, _rows, cols = _tile_d2(xq_ref, x_ref, row0, col0, m, bq, bk)
     e = jnp.exp(-jnp.maximum(d2, 0.0) * inv_two_h2)
     e = jnp.where(cols < m, e, 0.0)
-    acc[...] += jnp.sum(e, axis=1, keepdims=True)
-    out_ref[...] = acc[...]
+    t = jnp.sum(e, axis=1, keepdims=True)
+    a = acc[...]
+    s_ = a + t
+    comp[...] += jnp.where(
+        jnp.abs(a) >= jnp.abs(t), (a - s_) + t, (t - s_) + a
+    )
+    acc[...] = s_
+    sum_ref[...] = acc[...]
+    comp_ref[...] = comp[...]
+
+
+def _kde_kernel(xq_ref, x_ref, sum_ref, comp_ref, acc, comp, *, m, bq, bk, inv_two_h2):
+    i, j = pl.program_id(0), pl.program_id(1)
+    _kde_body(
+        xq_ref, x_ref, sum_ref, comp_ref, acc, comp,
+        i * bq, j * bk, j, m, bq, bk, inv_two_h2,
+    )
+
+
+def _kde_split_kernel(
+    xq_ref, x_ref, sum_ref, comp_ref, acc, comp, *, m, bq, bk, inv_two_h2, shard_rows
+):
+    s, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    _kde_body(
+        xq_ref, x_ref, sum_ref, comp_ref, acc, comp,
+        i * bq, s * shard_rows + j * bk, j, m, bq, bk, inv_two_h2,
+    )
 
 
 def _pad_to(arr: jax.Array, rows: int) -> jax.Array:
@@ -225,25 +302,216 @@ def pairwise_kde_pallas(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
-) -> jax.Array:
-    """-> Gaussian exp-SUM per query row (mq,); the caller divides by m."""
+) -> tuple[jax.Array, jax.Array]:
+    """-> compensated Gaussian exp-sum pair ((mq,) sums, (mq,) comps); the
+    caller folds ``sums + comps`` in float64 and divides by m."""
     mq = xq.shape[0]
     bq, bk = min(block_q, max(mq, 1)), block_k
     xq, x, grid, in_specs = _grid_and_specs(xq, x, bq, bk)
-    out = pl.pallas_call(
+    sums, comps = pl.pallas_call(
         functools.partial(
             _kde_kernel, m=m, bq=bq, bk=bk, inv_two_h2=float(inv_two_h2)
         ),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.float32),
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((xq.shape[0], 1), jnp.float32),
+        ),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),  # running exp-sum
+            pltpu.VMEM((bq, 1), jnp.float32),  # running compensation
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(xq, x)
-    return out[:mq, 0]
+    return sums[:mq, 0], comps[:mq, 0]
+
+
+# ------------------------------------------------------------ split variants
+# Same kernels with a LEADING 'parallel' shard axis on the grid: every
+# (shard, query-tile) pair carries its own online reduction over the shard's
+# dataset tiles, producing per-shard PARTIALS in one pallas_call — the
+# flash-decoding decomposition (cf. ``kernels/flash_decode``), merged
+# exactly on the host by ``analytics.split``.
+
+
+def _split_grid_and_specs(xq, x, shards, bq, bk):
+    """Grid/specs for the split kernels. ``x`` arrives shard-padded from
+    ``analytics.split._split_prepare``: (shards * shard_rows, d) with
+    shard_rows a whole number of bk-tiles."""
+    mq, d = xq.shape
+    pq = (-mq) % bq
+    xq = _pad_to(xq, mq + pq)
+    nq = (mq + pq) // bq
+    shard_rows = x.shape[0] // shards
+    tps = shard_rows // bk  # tiles per shard
+    grid = (shards, nq, tps)
+    in_specs = [
+        pl.BlockSpec((bq, d), lambda s, i, j: (i, 0)),
+        pl.BlockSpec((bk, d), lambda s, i, j, tps=tps: (s * tps + j, 0)),
+    ]
+    return xq, grid, in_specs, nq, shard_rows
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "shards", "block_q", "block_k", "interpret"),
+)
+def pairwise_knn_split_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    shards: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """-> per-shard partials ((shards, mq) int32 idx, (shards, mq) d2)."""
+    mq = xq.shape[0]
+    bq, bk = min(block_q, max(mq, 1)), block_k
+    xq, grid, in_specs, nq, shard_rows = _split_grid_and_specs(
+        xq, x, shards, bq, bk
+    )
+    idx, d2 = pl.pallas_call(
+        functools.partial(
+            _knn_split_kernel, m=m, bq=bq, bk=bk, shard_rows=shard_rows
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda s, i, j, nq=nq: (s * nq + i, 0)),
+            pl.BlockSpec((bq, 1), lambda s, i, j, nq=nq: (s * nq + i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((shards * xq.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((shards * xq.shape[0], 1), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    mq_pad = xq.shape[0]
+    return (
+        idx.reshape(shards, mq_pad)[:, :mq],
+        d2.reshape(shards, mq_pad)[:, :mq],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "eps2", "shards", "block_q", "block_k", "interpret"),
+)
+def pairwise_dbscan_split_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    eps2: float,
+    shards: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """-> ((shards, mq) int32 counts, (shards, mq, shard_words) uint32)."""
+    mq = xq.shape[0]
+    bq = min(block_q, max(mq, 1))
+    bk = max(32, (block_k // 32) * 32)
+    xq, grid, in_specs, nq, shard_rows = _split_grid_and_specs(
+        xq, x, shards, bq, bk
+    )
+    w = shard_rows // 32
+    cnt, packed = pl.pallas_call(
+        functools.partial(
+            _dbscan_split_kernel,
+            m=m, bq=bq, bk=bk, eps2=float(eps2), shard_rows=shard_rows,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda s, i, j, nq=nq: (s * nq + i, 0)),
+            pl.BlockSpec(
+                (bq, bk // 32), lambda s, i, j, nq=nq: (s * nq + i, j)
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((shards * xq.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((shards * xq.shape[0], w), jnp.uint32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    mq_pad = xq.shape[0]
+    return (
+        cnt.reshape(shards, mq_pad)[:, :mq],
+        packed.reshape(shards, mq_pad, w)[:, :mq],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "m", "inv_two_h2", "shards", "block_q", "block_k", "interpret"
+    ),
+)
+def pairwise_kde_split_pallas(
+    xq: jax.Array,
+    x: jax.Array,
+    m: int,
+    inv_two_h2: float,
+    shards: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """-> per-shard compensated pairs ((shards, mq) sums, (shards, mq) comps)."""
+    mq = xq.shape[0]
+    bq, bk = min(block_q, max(mq, 1)), block_k
+    xq, grid, in_specs, nq, shard_rows = _split_grid_and_specs(
+        xq, x, shards, bq, bk
+    )
+    sums, comps = pl.pallas_call(
+        functools.partial(
+            _kde_split_kernel,
+            m=m, bq=bq, bk=bk,
+            inv_two_h2=float(inv_two_h2), shard_rows=shard_rows,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            pl.BlockSpec((bq, 1), lambda s, i, j, nq=nq: (s * nq + i, 0)),
+            pl.BlockSpec((bq, 1), lambda s, i, j, nq=nq: (s * nq + i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((shards * xq.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((shards * xq.shape[0], 1), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, x)
+    mq_pad = xq.shape[0]
+    return (
+        sums.reshape(shards, mq_pad)[:, :mq],
+        comps.reshape(shards, mq_pad)[:, :mq],
+    )

@@ -51,3 +51,58 @@ def pairwise_kde_ref(xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float):
         0.0,
     )
     return jnp.sum(e, axis=1)
+
+
+# ------------------------------------------------------------ split oracles
+# Per-shard PARTIALS sliced out of the one-shot full-matrix reduction —
+# the simplest statement of the split kernels' contract (shard s covers
+# dataset columns [s*shard_rows, (s+1)*shard_rows) with GLOBAL indices).
+
+
+def _shard_cols(x: jax.Array, shards: int):
+    shard_rows = x.shape[0] // shards
+    return [(s * shard_rows, (s + 1) * shard_rows) for s in range(shards)]
+
+
+def pairwise_knn_split_ref(xq: jax.Array, x: jax.Array, m: int, shards: int):
+    d2 = _full_d2(xq, x, m)
+    rows = jnp.arange(xq.shape[0])
+    cols = jnp.arange(x.shape[0])
+    d2 = jnp.where(rows[:, None] == cols[None, :], jnp.inf, d2)
+    idx_p, d2_p = [], []
+    for a, b in _shard_cols(x, shards):
+        blk = d2[:, a:b]
+        loc = jnp.argmin(blk, axis=1)
+        idx_p.append((a + loc).astype(jnp.int32))
+        d2_p.append(jnp.take_along_axis(blk, loc[:, None], axis=1)[:, 0])
+    return jnp.stack(idx_p), jnp.stack(d2_p)
+
+
+def pairwise_dbscan_split_ref(
+    xq: jax.Array, x: jax.Array, m: int, eps2: float, shards: int
+):
+    from repro.kernels.pairwise_reduce.pairwise_reduce import pack_bits_u32
+
+    mask = _full_d2(xq, x, m) <= jnp.float32(eps2)
+    cnt_p, packed_p = [], []
+    for a, b in _shard_cols(x, shards):
+        blk = mask[:, a:b]
+        cnt_p.append(jnp.sum(blk, axis=1, dtype=jnp.int32))
+        pad = (-blk.shape[1]) % 32
+        packed_p.append(pack_bits_u32(jnp.pad(blk, ((0, 0), (0, pad)))))
+    return jnp.stack(cnt_p), jnp.stack(packed_p)
+
+
+def pairwise_kde_split_ref(
+    xq: jax.Array, x: jax.Array, m: int, inv_two_h2: float, shards: int
+):
+    d2 = _full_d2(xq, x, m)
+    e = jnp.where(
+        jnp.isfinite(d2),
+        jnp.exp(-jnp.maximum(d2, 0.0) * jnp.float32(inv_two_h2)),
+        0.0,
+    )
+    sums = jnp.stack(
+        [jnp.sum(e[:, a:b], axis=1) for a, b in _shard_cols(x, shards)]
+    )
+    return sums, jnp.zeros_like(sums)  # one-shot sums carry no compensation

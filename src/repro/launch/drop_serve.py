@@ -16,7 +16,11 @@ reports queries/sec, cache behavior, per-device occupancy, and the shared
 shape-bucket population. ``--method`` picks the Reducer per query (a comma
 list cycles across the workload — FFT/PAA queries are scheduled and cached
 exactly like DROP); ``--downstream`` prices the named analytics task as the
-cost model. ``--compare-sequential`` also times cold ``reduce()`` per query
+cost model, and ``--execute-downstream`` additionally RUNS it on each
+query's reduced data before the query finishes (``--analytics-split N`` /
+``--analytics-fanout`` select the exact-merge shard decomposition of that
+scan — see ``analytics.split``). ``--compare-sequential`` also times cold
+``reduce()`` per query
 for a direct speedup figure. ``--grow-steps N`` switches to the append-only
 demo: one tenant's dataset grows by ``--grow-frac`` rows per step and each
 snapshot climbs the escalation ladder (prefix hit -> incremental suffix
@@ -125,7 +129,8 @@ def _serve_append_stream(svc, args, method, cfg, cost) -> None:
 
 
 def _submit_async(
-    fe: IngestFrontend, datasets, methods, cfg, cost, downstream
+    fe: IngestFrontend, datasets, methods, cfg, cost, downstream,
+    execute_downstream: bool = False,
 ) -> list[int]:
     """Stream submissions through the bounded ingest queue, honoring
     reject-with-retry-after backpressure."""
@@ -134,7 +139,8 @@ def _submit_async(
         while True:
             try:
                 qids.append(
-                    fe.submit(x, cfg, cost, method=m, downstream=downstream)
+                    fe.submit(x, cfg, cost, method=m, downstream=downstream,
+                              execute_downstream=execute_downstream)
                 )
                 break
             except RetryLater as e:
@@ -156,6 +162,20 @@ def main() -> None:
     ap.add_argument("--downstream", type=str, default="knn",
                     choices=("knn", "dbscan", "kde"),
                     help="analytics task priced as the downstream cost model")
+    ap.add_argument("--execute-downstream", action="store_true",
+                    help="RUN the --downstream analytics on each query's "
+                         "reduced data before it finishes (the served "
+                         "end-to-end path; output lands on "
+                         "ServeResult.downstream)")
+    ap.add_argument("--analytics-split", type=int, default=None,
+                    help="run executed analytics as N flash-decoding-style "
+                         "dataset shards (exact merges — identical results; "
+                         "see analytics.split)")
+    ap.add_argument("--analytics-fanout", type=str, default=None,
+                    choices=("xla", "mesh"),
+                    help="shard execution: 'xla' batches shards in one "
+                         "dispatch, 'mesh' shard_maps them across devices "
+                         "(sharded scheduler defaults to mesh on >1 device)")
     ap.add_argument("--max-inflight", type=int, default=4)
     ap.add_argument("--cache-entries", type=int, default=16)
     ap.add_argument("--cache-ttl", type=int, default=None,
@@ -243,9 +263,12 @@ def main() -> None:
             cache_ttl=args.cache_ttl,
             enable_suffix_update=not args.no_suffix_update,
             suffix_budget=args.suffix_budget,
+            analytics_split=args.analytics_split,
+            analytics_fanout=args.analytics_fanout,
         )
         print(f"sharded scheduler over {len(svc.devices)} devices: "
-              f"{[str(d) for d in svc.devices]}")
+              f"{[str(d) for d in svc.devices]} "
+              f"(analytics fanout: {svc.analytics_fanout})")
     else:
         svc = DropService(
             max_inflight=args.max_inflight,
@@ -254,6 +277,8 @@ def main() -> None:
             cache_ttl=args.cache_ttl,
             enable_suffix_update=not args.no_suffix_update,
             suffix_budget=args.suffix_budget,
+            analytics_split=args.analytics_split,
+            analytics_fanout=args.analytics_fanout or "xla",
         )
     if args.grow_steps > 0:
         if args.use_async:
@@ -279,14 +304,16 @@ def main() -> None:
     if args.use_async:
         with IngestFrontend(svc, queue_capacity=args.queue_capacity) as fe:
             qids = _submit_async(
-                fe, datasets, methods, cfg, cost, args.downstream
+                fe, datasets, methods, cfg, cost, args.downstream,
+                args.execute_downstream,
             )
             results = sorted(
                 (fe.result(q) for q in qids), key=lambda r: r.query_id
             )
     else:
         for x, m in zip(datasets, methods):
-            svc.submit(x, cfg, cost, method=m, downstream=args.downstream)
+            svc.submit(x, cfg, cost, method=m, downstream=args.downstream,
+                       execute_downstream=args.execute_downstream)
         results = svc.run()
     dt = time.perf_counter() - t0
 
@@ -330,13 +357,24 @@ def main() -> None:
               f"steals={svc.stats.steals}")
     if not args.fleet:
         print(f"buckets: {svc.bucket.summary()}")
+    if args.execute_downstream and not args.fleet:
+        print(f"downstream [{args.downstream}]: {svc.stats.downstream_runs} "
+              f"served executions "
+              f"({svc.stats.downstream_failures} failed; "
+              f"split={args.analytics_split or 1}, "
+              f"fanout={svc.analytics_fanout})")
     for r in results:
         tag = ("SUFX" if r.suffix_update else "HIT " if r.cache_hit
                else "WARM" if r.warm_started else "COLD")
         where = f" @{r.worker}" if r.worker else ""
+        ds = (
+            f" ds={r.downstream_s*1e3:6.1f} ms"
+            if getattr(r, "downstream", None) is not None
+            else ""
+        )
         print(f"  q{r.query_id:02d} [{tag}] {r.result.method:3s} "
               f"k={r.result.k:3d} tlb={r.result.tlb_estimate:.4f} "
-              f"wall={r.wall_s*1e3:7.1f} ms{where}")
+              f"wall={r.wall_s*1e3:7.1f} ms{ds}{where}")
     if args.fleet:
         svc.shutdown()
 

@@ -3,6 +3,7 @@ downstream analytics it feeds, objective R + C_m(k) (paper §3.1 / §4.4)."""
 
 from repro.pipeline.optimizer import (  # noqa: F401
     DOWNSTREAMS,
+    AnalyticsOptions,
     MethodOutcome,
     OptimizerReport,
     WorkloadOptimizer,

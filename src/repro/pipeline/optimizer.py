@@ -41,36 +41,76 @@ from repro.core.reducer import REDUCER_METHODS, make_reducer
 from repro.core.types import DropConfig, ReduceResult
 
 # analytics runners keyed by the same names core.cost.downstream_cost prices.
-# Contract (changed with the fused engine): each entry is called as
-# fn(xt, use_kernels) — registrants must accept the positional bool even if
-# they ignore it
-DOWNSTREAMS: dict[str, Callable[[np.ndarray, bool], object]] = {}
+# Contract (changed with the split fan-out): each entry is called as
+# fn(xt, opts) with an ``AnalyticsOptions`` — registrants must accept the
+# options object even if they ignore it
+DOWNSTREAMS: dict[str, Callable[[np.ndarray, "AnalyticsOptions"], object]] = {}
+
+
+@dataclass(frozen=True)
+class AnalyticsOptions:
+    """Execution knobs threaded from the optimizer/serving layers into the
+    analytics runners (``analytics.split`` fan-out semantics):
+
+    ``use_kernels`` — Pallas kernel path where a kernel backend is live;
+    ``split``       — run the dataset axis as N flash-decoding-style shards
+                      (None = the sequential fused scan);
+    ``fanout``      — "xla" batches shards in one dispatch on one device,
+                      "mesh" shard_maps them across ``devices``;
+    ``devices``     — mesh fan-out targets (None = all visible devices)."""
+
+    use_kernels: bool = False
+    split: int | None = None
+    fanout: str = "xla"
+    devices: tuple | None = None
 
 
 def _register_downstreams() -> None:
     from repro.analytics import dbscan, gaussian_kde, nearest_neighbors
 
+    def _kw(o: AnalyticsOptions) -> dict:
+        return dict(
+            use_kernels=o.use_kernels, split=o.split,
+            fanout=o.fanout, devices=o.devices,
+        )
+
     DOWNSTREAMS.update(
-        knn=lambda xt, uk: nearest_neighbors(xt, use_kernels=uk),
-        dbscan=lambda xt, uk: dbscan(xt, use_kernels=uk),
-        kde=lambda xt, uk: gaussian_kde(xt, use_kernels=uk),
+        knn=lambda xt, o: nearest_neighbors(xt, **_kw(o)),
+        dbscan=lambda xt, o: dbscan(xt, **_kw(o)),
+        kde=lambda xt, o: gaussian_kde(xt, **_kw(o)),
     )
 
 
 _register_downstreams()
 
 
-def run_downstream(name: str, xt: np.ndarray, *, use_kernels: bool = False):
+def run_downstream(
+    name: str,
+    xt: np.ndarray,
+    *,
+    use_kernels: bool = False,
+    split: int | None = None,
+    fanout: str = "xla",
+    devices=None,
+):
     """Execute the named analytics task on reduced data ``xt``. All three
     tasks run on the fused pairwise engine; ``use_kernels`` opts into its
-    Pallas kernel path where a kernel backend is live (TPU/interpret)."""
+    Pallas kernel path where a kernel backend is live (TPU/interpret), and
+    ``split``/``fanout``/``devices`` select the shard decomposition
+    (``analytics.split`` — exact merges, same results)."""
     try:
         fn = DOWNSTREAMS[name]
     except KeyError:
         raise KeyError(
             f"unknown downstream {name!r}; know {tuple(DOWNSTREAMS)}"
         ) from None
-    return fn(np.ascontiguousarray(xt, dtype=np.float32), use_kernels)
+    opts = AnalyticsOptions(
+        use_kernels=use_kernels,
+        split=split,
+        fanout=fanout,
+        devices=None if devices is None else tuple(devices),
+    )
+    return fn(np.ascontiguousarray(xt, dtype=np.float32), opts)
 
 
 # DR-cost ordering for the plan: O(md) PAA, O(md) Haar, O(md log d) FFT,
@@ -137,6 +177,11 @@ class WorkloadOptimizer:
     the default model with the measured k-independent O(m^2) memory term
     (the term is method-independent, so the CHOICE is identical either
     way — only the absolute priced objectives differ).
+    ``analytics_split`` / ``analytics_fanout`` / ``analytics_devices`` —
+    shard decomposition for the EXECUTED analytics (``analytics.split``:
+    split=N dataset shards, fanout="mesh" fans them across devices); the
+    merges are exact, so the report's measured downstream numbers describe
+    the same computation.
     """
 
     def __init__(
@@ -145,6 +190,9 @@ class WorkloadOptimizer:
         cfg: DropConfig | None = None,
         cost_coeff: float | None = None,
         legacy_cost: bool = False,
+        analytics_split: int | None = None,
+        analytics_fanout: str = "xla",
+        analytics_devices=None,
     ) -> None:
         unknown = [m for m in methods if m not in REDUCER_METHODS]
         if unknown:
@@ -153,6 +201,9 @@ class WorkloadOptimizer:
         self.cfg = cfg or DropConfig()
         self.cost_coeff = cost_coeff
         self.legacy_cost = legacy_cost
+        self.analytics_split = analytics_split
+        self.analytics_fanout = analytics_fanout
+        self.analytics_devices = analytics_devices
 
     def plan(self, x: np.ndarray, downstream: str = "knn") -> list[str]:
         """Candidate evaluation order: cheapest DR first, DROP last (a
@@ -228,7 +279,12 @@ class WorkloadOptimizer:
                 xt = o.result.transform(x)
                 t0 = time.perf_counter()
                 run_downstream(
-                    downstream, xt, use_kernels=self.cfg.use_kernels
+                    downstream,
+                    xt,
+                    use_kernels=self.cfg.use_kernels,
+                    split=self.analytics_split,
+                    fanout=self.analytics_fanout,
+                    devices=self.analytics_devices,
                 )
                 o.downstream_s = time.perf_counter() - t0
                 o.end_to_end_s = o.reduce_s + o.downstream_s

@@ -43,6 +43,17 @@ that bench into a first-class deployment mode:
   home worker (its basis cache is warm for them) and move only when
   another worker is decisively cheaper (``rebalance_margin``), surfaced
   as ``ServiceStats.rebalances``.
+* **link re-profiling** — the alpha/beta fit is NOT startup-only: a link
+  profile ages out after ``reprofile_interval_s`` seconds or
+  ``reprofile_after_serves`` serves, whereupon the supervision loop
+  re-runs a cheap echo probe on the idle worker (a background thread off
+  the serving hot path) and REPLACES the fit. Compute speed needs no
+  probe — the serve-time EWMA keeps it fresh — but transfer cost is only
+  observable by echoing, so a link that degrades after startup (shared
+  NIC, cgroup throttling, pipe contention) would otherwise keep its
+  stale, optimistic profile and placement would keep routing tenants
+  into the slow link. Re-profiles are surfaced as
+  ``ServiceStats.reprofiles``.
 
 Costs across the boundary: ``CostModel`` closures do not pickle, so fleet
 queries carry the ``downstream`` task name (workers re-price it) or one of
@@ -167,7 +178,9 @@ def _serve_one(svc, msg):
     x = msg["x"]
     cost = _cost_from_spec(msg["cost"], x.shape[0])
     qid = svc.submit(
-        x, msg["cfg"], cost, method=msg["method"], downstream=msg["downstream"]
+        x, msg["cfg"], cost, method=msg["method"],
+        downstream=msg["downstream"],
+        execute_downstream=msg.get("xds", False),
     )
     out = None
     for r in svc.run():
@@ -189,6 +202,11 @@ def _worker_main(argv: list[str]) -> None:
     ap.add_argument("--failure-prob", type=float, default=0.0)
     ap.add_argument("--failure-seed", type=int, default=0)
     ap.add_argument("--slowdown-s", type=float, default=0.0)
+    # test knob: delay echo replies only after the first N pings, so a link
+    # can "degrade" after the startup profile completes (see
+    # FleetSupervisor.worker_link_delays)
+    ap.add_argument("--pong-delay-s", type=float, default=0.0)
+    ap.add_argument("--pong-delay-after", type=int, default=0)
     ap.add_argument("--no-cache", action="store_true")
     args = ap.parse_args(argv)
 
@@ -235,12 +253,16 @@ def _worker_main(argv: list[str]) -> None:
     send({"t": "ready", "pid": os.getpid(), "incarnation": args.incarnation})
 
     served = 0
+    pings = 0
     while True:
         msg = _recv_frame(inp)
         if msg is None or msg["t"] == "stop":
             break
         t = msg["t"]
         if t == "ping":  # link profiling: echo the payload back
+            pings += 1
+            if args.pong_delay_s > 0 and pings > args.pong_delay_after:
+                time.sleep(args.pong_delay_s)  # simulated link degradation
             send({"t": "pong", "n": msg["n"], "blob": msg["blob"]})
         elif t == "prof":
             send({"t": "prof", "n": msg["n"], "seconds": _compute_probe()})
@@ -300,6 +322,7 @@ class _FleetQuery:
     fp: str
     t0: float  # submit time (ServeResult.wall_s baseline)
     nbytes: int
+    execute_downstream: bool = False
     retries: int = 0
     dispatch_t: float = 0.0
 
@@ -326,6 +349,10 @@ class _Worker:
         self.served = 0
         self.straggler = None  # fault.StragglerMonitor, set by supervisor
         self.rpc: dict[int, tuple[threading.Event, dict]] = {}
+        # link-profile freshness (reprofile age-out; see _maybe_reprofile)
+        self.profiled_at = 0.0  # perf_counter of the last alpha/beta fit
+        self.served_at_profile = 0  # w.served when that fit was taken
+        self.reprofiling = False  # a background echo probe is in flight
 
 
 class FleetSupervisor:
@@ -355,10 +382,14 @@ class FleetSupervisor:
         default_query_s: float = 0.05,
         max_query_retries: int = 2,
         profile: bool = True,
+        reprofile_interval_s: float = 60.0,
+        reprofile_after_serves: int = 256,
         pin_cores: bool = True,
         failure_prob: float = 0.0,
         failure_seed: int = 0,
         worker_slowdowns: list[float] | None = None,
+        worker_link_delays: list[float] | None = None,
+        link_delay_after_pings: int = 9,
         startup_timeout_s: float = 180.0,
     ) -> None:
         from repro.fault.faults import RestartPolicy, StragglerMonitor
@@ -380,9 +411,19 @@ class FleetSupervisor:
         self.default_query_s = float(default_query_s)
         self.max_query_retries = int(max_query_retries)
         self.profile = profile
+        # link-profile age-out: whichever trips first re-triggers the echo
+        # probe (<=0 disables that trigger; profile=False disables both)
+        self.reprofile_interval_s = float(reprofile_interval_s)
+        self.reprofile_after_serves = int(reprofile_after_serves)
         self.failure_prob = float(failure_prob)
         self.failure_seed = int(failure_seed)
         self.worker_slowdowns = worker_slowdowns or []
+        # test knobs: per-worker echo delay that kicks in only after the
+        # first ``link_delay_after_pings`` pings — the default 9 equals the
+        # startup probe's ping count (1 throwaway + 4 sizes x 2 reps), so
+        # the link "degrades" right after its startup profile is taken
+        self.worker_link_delays = worker_link_delays or []
+        self.link_delay_after_pings = int(link_delay_after_pings)
         self.startup_timeout_s = startup_timeout_s
         self.stats = ServiceStats()
         self.on_result = None  # ingest hook, fired with no lock held
@@ -474,6 +515,11 @@ class FleetSupervisor:
             ]
         if w.index < len(self.worker_slowdowns):
             argv += ["--slowdown-s", str(self.worker_slowdowns[w.index])]
+        if w.index < len(self.worker_link_delays):
+            argv += [
+                "--pong-delay-s", str(self.worker_link_delays[w.index]),
+                "--pong-delay-after", str(self.link_delay_after_pings),
+            ]
         env = dict(os.environ)
         import repro
 
@@ -540,30 +586,87 @@ class FleetSupervisor:
             raise RuntimeError(f"{w.label} died mid-{msg['t']}")
         return reply
 
-    def _profile_worker(self, w: _Worker) -> None:
-        """Fit the link's alpha/beta transfer model from echo round-trips
-        over growing payloads, and measure compute speed with a fixed
-        probe (colossal-ai AlphaBetaProfiler-style, over pipes)."""
+    def _fit_link(self, w: _Worker, sizes: list[int], reps: int) -> None:
+        """Fit and REPLACE the link's alpha/beta model from echo
+        round-trips over growing payloads, stamping the profile fresh."""
         import numpy as np
 
         self._rpc(w, {"t": "ping", "blob": b""})  # throwaway: first-recv cost
-        sizes = [1 << 10, 1 << 15, 1 << 18, 1 << 20]
         rtts = []
         for s in sizes:
             blob = b"\0" * s
             best = float("inf")
-            for _ in range(2):
+            for _ in range(reps):
                 t0 = time.perf_counter()
                 self._rpc(w, {"t": "ping", "blob": blob})
                 best = min(best, time.perf_counter() - t0)
             rtts.append(best)
         beta, alpha = np.polyfit(np.asarray(sizes, float), np.asarray(rtts), 1)
         # one-way cost; clamp: tiny-noise fits can go (meaninglessly) negative
-        w.link = LinkProfile(
-            alpha_s=max(float(alpha) / 2.0, 1e-6),
-            beta_s_per_byte=max(float(beta) / 2.0, 1e-12),
-        )
+        with self._lock:
+            w.link = LinkProfile(
+                alpha_s=max(float(alpha) / 2.0, 1e-6),
+                beta_s_per_byte=max(float(beta) / 2.0, 1e-12),
+            )
+            w.profiled_at = time.perf_counter()
+            w.served_at_profile = w.served
+
+    def _profile_worker(self, w: _Worker) -> None:
+        """Startup profiling: the link's alpha/beta transfer model plus the
+        worker's compute speed with a fixed probe (colossal-ai
+        AlphaBetaProfiler-style, over pipes)."""
+        self._fit_link(w, [1 << 10, 1 << 15, 1 << 18, 1 << 20], reps=2)
         w.probe_s = float(self._rpc(w, {"t": "prof"})["seconds"])
+
+    def _maybe_reprofile(self, now: float) -> None:
+        """Age out stale link profiles (supervision tick). A ready, IDLE
+        worker whose fit is older than ``reprofile_interval_s`` or has
+        ``reprofile_after_serves`` serves behind it gets a cheap echo probe
+        on a background thread — queries never wait behind pings, and an
+        idle worker's pipe carries nothing else, so the fit is clean.
+        Compute speed is NOT re-probed: the serve-time EWMA tracks it."""
+        if not self.profile:
+            return
+        for w in self._workers:
+            with self._lock:
+                stale_t = (
+                    self.reprofile_interval_s > 0
+                    and now - w.profiled_at > self.reprofile_interval_s
+                )
+                stale_n = (
+                    self.reprofile_after_serves > 0
+                    and w.served - w.served_at_profile
+                    >= self.reprofile_after_serves
+                )
+                due = (
+                    w.state == "ready"
+                    and not w.reprofiling
+                    and w.profiled_at > 0.0  # startup profile completed
+                    and not w.assigned  # idle: stay off the hot path
+                    and (stale_t or stale_n)
+                )
+                if due:
+                    w.reprofiling = True
+            if due:
+                threading.Thread(
+                    target=self._reprofile, args=(w,),
+                    name=f"fleet-w{w.index}-reprofile", daemon=True,
+                ).start()
+
+    def _reprofile(self, w: _Worker) -> None:
+        """One background link re-profile (cheaper than startup: one rep,
+        no megabyte payload). A worker death mid-probe is absorbed — the
+        supervision ladder owns restarts, and the old profile stands until
+        a probe completes."""
+        try:
+            self._fit_link(w, [1 << 10, 1 << 15, 1 << 18], reps=1)
+            with self._lock:
+                self.stats.reprofiles += 1
+        except (RuntimeError, TimeoutError):
+            pass
+        finally:
+            with self._lock:
+                w.reprofiling = False
 
     def _normalize_speeds(self) -> None:
         probed = [w.probe_s for w in self._workers if w.probe_s]
@@ -721,21 +824,26 @@ class FleetSupervisor:
         w.outbox.put({
             "t": "q", "qid": fq.qid, "x": fq.x, "cfg": fq.cfg,
             "cost": fq.cost, "method": fq.method, "downstream": fq.downstream,
+            "xds": fq.execute_downstream,
         })
 
     # -------------------------------------------------------------- intake
 
     def submit(
         self, x, cfg=None, cost=None, *, method: str = "pca",
-        downstream: str | None = None,
+        downstream: str | None = None, execute_downstream: bool = False,
     ) -> int:
-        qid = self.try_submit(x, cfg, cost, method=method, downstream=downstream)
+        qid = self.try_submit(
+            x, cfg, cost, method=method, downstream=downstream,
+            execute_downstream=execute_downstream,
+        )
         assert qid is not None  # unbounded submit never rejects
         return qid
 
     def try_submit(
         self, x, cfg=None, cost=None, *, method: str = "pca",
-        downstream: str | None = None, max_backlog: int | None = None,
+        downstream: str | None = None, execute_downstream: bool = False,
+        max_backlog: int | None = None,
     ) -> int | None:
         """Enqueue unless the fleet backlog is at ``max_backlog`` (ingest
         backpressure). The conversion/hash work runs on the submitter's
@@ -747,6 +855,8 @@ class FleetSupervisor:
 
         if not self._started:
             self.start()
+        if execute_downstream and downstream is None:
+            raise ValueError("execute_downstream requires a downstream task")
         x = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
         cfg = cfg or DropConfig()
         spec = _cost_spec(cost)
@@ -761,7 +871,7 @@ class FleetSupervisor:
             fq = _FleetQuery(
                 qid=qid, x=x, cfg=cfg, cost=spec, method=method,
                 downstream=downstream, fp=fp, t0=time.perf_counter(),
-                nbytes=int(x.nbytes),
+                nbytes=int(x.nbytes), execute_downstream=execute_downstream,
             )
             w = self._place(fq)
             if w is None:
@@ -827,6 +937,7 @@ class FleetSupervisor:
                     w.incarnation += 1
                     self.stats.worker_restarts += 1
                     self._spawn(w)
+        self._maybe_reprofile(now)
         self._flush_pending()
 
     def _flush_pending(self) -> None:

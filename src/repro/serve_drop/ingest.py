@@ -153,6 +153,7 @@ class IngestFrontend:
         *,
         method: str = "pca",
         downstream: str | None = None,
+        execute_downstream: bool = False,
     ) -> int:
         """Enqueue a query from any thread (any Reducer ``method``; the
         single-shot baselines are one-step runners to the scheduler).
@@ -165,6 +166,7 @@ class IngestFrontend:
             raise RetryLater(self._retry_after(backlog), backlog)
         qid = self.service.try_submit(
             x, cfg, cost, method=method, downstream=downstream,
+            execute_downstream=execute_downstream,
             max_backlog=self.queue_capacity,
         )
         if qid is None:

@@ -80,6 +80,10 @@ class ReduceQuery:
     cost: CostFn | None = None
     method: str = "pca"
     downstream: str | None = None  # provenance; cost resolved at submit()
+    # run the named downstream analytics on the reduced data and attach the
+    # output to ServeResult.downstream (the served end-to-end path); the
+    # analytics execute as a scheduled work item like any device compute
+    execute_downstream: bool = False
     fingerprint: str = ""  # computed once at submit()
     # rows -> fingerprint of x[:rows] for cached candidate prefix lengths,
     # hashed on the submitter's thread (append-only stream matching); best
@@ -101,6 +105,8 @@ class ServeResult:
     suffix_update: bool = False  # served by an incremental subspace update
     wall_s: float = 0.0
     error: str | None = None  # set when the query's runner raised mid-flight
+    downstream: object = None  # executed analytics output (execute_downstream)
+    downstream_s: float = 0.0  # analytics compute seconds (within wall_s)
     worker: str | None = None  # fleet mode: label of the worker that served it
     retries: int = 0  # fleet mode: re-dispatches after a worker death
 
@@ -117,6 +123,8 @@ class ServiceStats:
     validation_pairs: int = 0
     suffix_updates: int = 0  # queries served by an incremental merge
     suffix_update_failures: int = 0  # updates that fell through (or raised)
+    downstream_runs: int = 0  # served analytics executions (execute_downstream)
+    downstream_failures: int = 0  # analytics executions that raised
     failures: int = 0  # queries finished with ServeResult.error set
     rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
     steals: int = 0  # runners migrated to an idle device between rounds
@@ -128,6 +136,7 @@ class ServiceStats:
     requeued_queries: int = 0  # in-flight queries re-dispatched after a death
     rebalances: int = 0  # tenants moved to a measured-cheaper worker
     straggler_flags: int = 0  # worker serve times flagged by StragglerMonitor
+    reprofiles: int = 0  # periodic link re-profiles (stale-profile age-out)
     effective_ttl: int | None = None  # live auto-tuned cache TTL (ticks)
     # per-device occupancy: device label -> iterations stepped there; the
     # single-host service books everything under "default"
@@ -177,6 +186,25 @@ class _SuffixUpdate:
     device: object = None  # mesh device to update on (sharded)
 
 
+@dataclass(eq=False)
+class _Downstream:
+    """A pending served-analytics execution: the query's reduction already
+    finished (``base`` holds its committed ``ServeResult``) and the named
+    downstream task now runs on the reduced data. Device compute, scheduled
+    exactly like a ``_Validation`` (off-lock, counted in flight); a raising
+    analytics run finishes the query with ``ServeResult.error`` set while
+    KEEPING the reduction result — the map is still good."""
+
+    query: ReduceQuery
+    base: ServeResult
+    t0: float
+    device: object = None  # mesh device to run the analytics on (sharded)
+
+    @property
+    def fingerprint(self) -> str:  # dedup visibility, like the other items
+        return self.query.fingerprint
+
+
 class DropService:
     """Multi-tenant DROP scheduler with an LRU basis-reuse cache."""
 
@@ -191,8 +219,20 @@ class DropService:
         cache_ttl_auto: bool = False,
         enable_suffix_update: bool = True,
         suffix_budget: float = 0.25,
+        analytics_split: int | None = None,
+        analytics_fanout: str = "xla",
+        analytics_devices=None,
     ) -> None:
         self.max_inflight = max(int(max_inflight), 1)
+        # served-analytics execution knobs (``analytics.split`` semantics):
+        # split=N runs the downstream pairwise scan as N dataset shards,
+        # fanout="mesh" fans them across analytics_devices — exact merges,
+        # so the served output is independent of the decomposition
+        self.analytics_split = analytics_split
+        self.analytics_fanout = analytics_fanout
+        self.analytics_devices = (
+            None if analytics_devices is None else tuple(analytics_devices)
+        )
         # append-only escalation knobs: a prefix-matched suffix larger than
         # suffix_budget * fitted rows skips revalidation (a map fitted that
         # many rows ago mostly buys a failed validation) and goes straight
@@ -213,6 +253,9 @@ class DropService:
         self._inflight: deque[_InFlight] = deque()
         self._validations: deque[_Validation] = deque()
         self._results: dict[int, ServeResult] = {}
+        # query ids whose results became visible but have not been notified
+        # yet (drained by the next _poll_once tick, under the lock)
+        self._done_now: list[int] = []
         self._next_id = 0
         # one scheduler lock guards queue/flight/cache/results/stats; device
         # compute (steps AND revalidations) runs outside it so submit()
@@ -235,17 +278,22 @@ class DropService:
         *,
         method: str = "pca",
         downstream: str | None = None,
+        execute_downstream: bool = False,
     ) -> int:
         """Enqueue a query; returns its id (results keyed by it).
 
         ``method`` selects the Reducer (pca/fft/paa/dwt/jl); ``downstream``
         names an analytics task (knn/dbscan/kde) to price as the cost model
-        when ``cost`` is not given explicitly.
+        when ``cost`` is not given explicitly. ``execute_downstream=True``
+        additionally RUNS that task on the reduced data before the query
+        finishes, attaching the output as ``ServeResult.downstream`` (the
+        service's analytics knobs select the shard decomposition).
 
         Thread-safe: the fingerprint is hashed outside the scheduler lock, so
         concurrent submitters only serialize on the queue append."""
         qid = self.try_submit(
-            x, cfg, cost, method=method, downstream=downstream
+            x, cfg, cost, method=method, downstream=downstream,
+            execute_downstream=execute_downstream,
         )
         assert qid is not None  # unbounded submit never rejects
         return qid
@@ -258,6 +306,7 @@ class DropService:
         *,
         method: str = "pca",
         downstream: str | None = None,
+        execute_downstream: bool = False,
         max_backlog: int | None = None,
     ) -> int | None:
         """Enqueue unless the backlog is at ``max_backlog``; returns the
@@ -272,6 +321,8 @@ class DropService:
         hashes a tenant's dataset."""
         x = np.ascontiguousarray(np.asarray(x), dtype=np.float32)
         cfg = cfg or DropConfig()
+        if execute_downstream and downstream is None:
+            raise ValueError("execute_downstream requires a downstream task")
         fp = dataset_fingerprint(x)
         if cost is None and downstream is not None:
             from repro.core.cost import downstream_cost
@@ -296,6 +347,7 @@ class DropService:
             self._queue.append(
                 ReduceQuery(query_id=qid, x=x, cfg=cfg, cost=cost,
                             method=method, downstream=downstream,
+                            execute_downstream=execute_downstream,
                             fingerprint=fp, prefix_fps=prefix_fps)
             )
             self.stats.queries += 1
@@ -487,15 +539,38 @@ class DropService:
             _InFlight(q, runner, fp, warm_started=warm_k is not None, t0=t0)
         )
 
+    def _commit(self, sr: ServeResult, q: ReduceQuery, t0: float) -> None:
+        """Retire a query's reduction result: either finish it outright, or
+        — when the query asked for executed analytics and the reduction
+        produced a usable map — hold the result and schedule a
+        ``_Downstream`` work item (off-lock device compute, load-balanced
+        by the sharded subclass like any validation). Caller holds the
+        lock; finished ids queue on ``_done_now`` for the tick to notify."""
+        if (
+            q.execute_downstream
+            and q.downstream is not None
+            and sr.error is None
+        ):
+            ds = _Downstream(q, sr, t0)
+            self._place_validation(ds)  # sharded: pick a device
+            self._validations.append(ds)
+            return
+        self._results[q.query_id] = sr
+        self._done_now.append(q.query_id)
+
     def _finish(self, fl: _InFlight) -> None:
         res = fl.runner.result()
         self.stats.fit_calls += fl.runner.fit_calls
         self.stats.iterations += len(res.iterations)
-        self._results[fl.query.query_id] = ServeResult(
-            query_id=fl.query.query_id,
-            result=res,
-            warm_started=fl.warm_started,
-            wall_s=time.perf_counter() - fl.t0,
+        self._commit(
+            ServeResult(
+                query_id=fl.query.query_id,
+                result=res,
+                warm_started=fl.warm_started,
+                wall_s=time.perf_counter() - fl.t0,
+            ),
+            fl.query,
+            fl.t0,
         )
         if res.satisfied and self.enable_cache and fl.runner.cacheable:
             tracker = None
@@ -661,14 +736,17 @@ class DropService:
                             tracker=new_tracker,
                         ),
                     )
-                self._results[q.query_id] = ServeResult(
-                    query_id=q.query_id,
-                    result=result,
-                    cache_hit=True,
-                    prefix_hit=val.prefix,
-                    wall_s=time.perf_counter() - val.t0,
+                self._commit(
+                    ServeResult(
+                        query_id=q.query_id,
+                        result=result,
+                        cache_hit=True,
+                        prefix_hit=val.prefix,
+                        wall_s=time.perf_counter() - val.t0,
+                    ),
+                    q,
+                    val.t0,
                 )
-                done.append(q.query_id)
             elif (
                 not errored
                 and val.prefix
@@ -753,13 +831,16 @@ class DropService:
                         tracker=tracker,
                     ),
                 )
-                self._results[q.query_id] = ServeResult(
-                    query_id=q.query_id,
-                    result=result,
-                    suffix_update=True,
-                    wall_s=time.perf_counter() - upd.t0,
+                self._commit(
+                    ServeResult(
+                        query_id=q.query_id,
+                        result=result,
+                        suffix_update=True,
+                        wall_s=time.perf_counter() - upd.t0,
+                    ),
+                    q,
+                    upd.t0,
                 )
-                done.append(q.query_id)
             else:
                 # the suffix outgrew the tracked headroom: cold refit is the
                 # last resort, warm-started from the entry's known-good rank
@@ -770,6 +851,54 @@ class DropService:
                         upd.entry.k if upd.entry.satisfied else None
                     ),
                 )
+
+    def _apply_downstream(self, ds: _Downstream):
+        """Device compute for one served-analytics run (outside the lock):
+        project the dataset through the finished map and execute the named
+        task via the optimizer's registry — same code path, same analytics
+        knobs (``split``/``fanout``/``devices``) as ``WorkloadOptimizer``.
+        The sharded subclass wraps this in the work item's device scope (or
+        lets the mesh fan-out claim the whole mesh)."""
+        from repro.pipeline.optimizer import run_downstream
+
+        xt = ds.base.result.transform(ds.query.x)
+        return run_downstream(
+            ds.query.downstream,
+            xt,
+            use_kernels=ds.query.cfg.use_kernels,
+            split=self.analytics_split,
+            fanout=self.analytics_fanout,
+            devices=self.analytics_devices,
+        )
+
+    def _run_downstream(self, ds: _Downstream, done: list[int]) -> None:
+        """Execute one served analytics task outside the lock and commit:
+        the output lands on the ALREADY-FINISHED reduction result
+        (``ServeResult.downstream``); a raising run sets
+        ``ServeResult.error`` but keeps the map — the reduction itself
+        succeeded, only the analytics leg failed."""
+        t_ds = time.perf_counter()
+        out, error = None, None
+        try:
+            out = self._apply_downstream(ds)
+        except Exception as exc:
+            error = f"downstream: {type(exc).__name__}: {exc}"
+        downstream_s = time.perf_counter() - t_ds
+        q = ds.query
+        with self._lock:
+            self._stepping_now.remove(ds)
+            sr = ds.base
+            sr.downstream = out
+            sr.downstream_s = downstream_s
+            sr.wall_s = time.perf_counter() - ds.t0
+            if error is None:
+                self.stats.downstream_runs += 1
+            else:
+                sr.error = error
+                self.stats.downstream_failures += 1
+                self.stats.failures += 1
+            self._results[q.query_id] = sr
+            done.append(q.query_id)
 
     def _poll_once(self) -> tuple[bool, bool]:
         """One scheduler tick. Returns (stepped, work_remains)."""
@@ -783,7 +912,9 @@ class DropService:
             return False, more
         done: list[int] = []
         try:
-            if isinstance(work, _SuffixUpdate):
+            if isinstance(work, _Downstream):
+                self._run_downstream(work, done)
+            elif isinstance(work, _SuffixUpdate):
                 self._run_suffix_update(work, done)
             elif isinstance(work, _Validation):
                 self._run_validation(work, done)
@@ -803,7 +934,6 @@ class DropService:
                             self._requeue_runner(work)  # rotate: fair share
                         else:
                             self._finish(work)
-                            done.append(work.query.query_id)
         except Exception as exc:
             # containment of last resort: the per-path handlers above catch
             # COMPUTE errors, but a commit section (cache put, tracker merge
@@ -814,6 +944,10 @@ class DropService:
             # finish its query with ServeResult.error.
             self._abandon(work, exc, done)
         with self._lock:
+            # results committed via _commit (this tick's, or a concurrent
+            # tick's not-yet-drained ones) become notifications here
+            done.extend(self._done_now)
+            self._done_now.clear()
             more = self._work_remains()
         self._notify(done)
         return True, more

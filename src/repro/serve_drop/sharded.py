@@ -80,10 +80,18 @@ class ShardedDropService(DropService):
         cache_ttl: int | None = None,
         enable_suffix_update: bool = True,
         suffix_budget: float = 0.25,
+        analytics_split: int | None = None,
+        analytics_fanout: str | None = None,
     ) -> None:
         if isinstance(devices, int) or devices is None:
             devices = serve_devices(devices)
         devices = list(devices)
+        # served analytics default to the mesh fan-out when a real mesh
+        # exists (every device computes one dataset-shard partial of the
+        # pairwise scan; exact merges — see analytics.split), and to the
+        # single-device split otherwise
+        if analytics_fanout is None:
+            analytics_fanout = "mesh" if len(devices) > 1 else "xla"
         # one bucket cache per device class: same-class tenants share one
         # quantization policy (=> shared executables per device), while a
         # mixed mesh keeps per-class bucket telemetry honest
@@ -99,6 +107,11 @@ class ShardedDropService(DropService):
             cache_ttl=cache_ttl,
             enable_suffix_update=enable_suffix_update,
             suffix_budget=suffix_budget,
+            analytics_split=analytics_split,
+            analytics_fanout=analytics_fanout,
+            analytics_devices=(
+                tuple(devices) if analytics_fanout == "mesh" else None
+            ),
         )
         self.devices = devices
         self._slots = [_DeviceSlot(d) for d in devices]
@@ -163,6 +176,16 @@ class ShardedDropService(DropService):
         # must land on the work item's device like any validation
         with jax.default_device(upd.device or self.devices[0]):
             return super()._apply_suffix_update(upd)
+
+    def _apply_downstream(self, ds):
+        # mesh fan-out claims the whole mesh by construction (shard_map
+        # places one dataset-shard partial per device), so the work item's
+        # device assignment is bookkeeping only; a single-device analytics
+        # run is pinned like any validation
+        if self.analytics_fanout == "mesh":
+            return super()._apply_downstream(ds)
+        with jax.default_device(ds.device or self.devices[0]):
+            return super()._apply_downstream(ds)
 
     def _slot_of(self, device) -> _DeviceSlot:
         return next(s for s in self._slots if s.device == device)

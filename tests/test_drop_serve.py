@@ -399,3 +399,72 @@ def test_served_query_use_kernels_interpret_parity(monkeypatch):
     np.testing.assert_allclose(
         r_kern.result.tlb_estimate, r_plain.result.tlb_estimate, atol=5e-4
     )
+
+
+# ------------------------------------------------- served downstream exec
+
+
+def test_execute_downstream_attaches_parity_output():
+    """execute_downstream=True runs the declared analytics task on the
+    reduced data as a scheduled work item and attaches its output to the
+    ServeResult — identical to calling run_downstream on the transform
+    (the split decomposition is exact, so analytics_split changes
+    nothing)."""
+    from repro.pipeline.optimizer import run_downstream
+
+    x = _datasets(1, rows=260, dim=24)[0]
+    svc = DropService(enable_cache=False, analytics_split=2)
+    svc.submit(x, CFG, zero_cost(), downstream="knn",
+               execute_downstream=True)
+    r = svc.run()[0]
+    assert r.error is None
+    assert r.downstream is not None
+    assert r.downstream_s > 0.0
+    assert svc.stats.downstream_runs == 1
+    xt = r.result.transform(x)
+    assert np.array_equal(r.downstream, run_downstream("knn", xt))
+
+
+def test_execute_downstream_on_cache_hit():
+    """A cache-hit query still gets its analytics leg: the basis is
+    reused, the downstream task runs on the reused transform."""
+    x = _datasets(1, rows=260, dim=24)[0]
+    svc = DropService()
+    svc.submit(x, CFG, zero_cost(), downstream="kde",
+               execute_downstream=True)
+    svc.submit(x, CFG, zero_cost(), downstream="kde",
+               execute_downstream=True)
+    r1, r2 = svc.run()
+    assert r2.cache_hit and not r1.cache_hit
+    assert r1.downstream is not None and r2.downstream is not None
+    assert svc.stats.downstream_runs == 2
+    np.testing.assert_allclose(r1.downstream, r2.downstream, rtol=1e-5)
+
+
+def test_execute_downstream_error_contained(monkeypatch):
+    """A downstream failure must not lose the reduction: the result (and
+    its basis) commit with the error recorded, and the scheduler keeps
+    draining."""
+    import repro.pipeline.optimizer as opt_mod
+
+    def boom(*a, **k):
+        raise RuntimeError("analytics exploded")
+
+    monkeypatch.setattr(opt_mod, "run_downstream", boom)
+    x = _datasets(1, rows=260, dim=24)[0]
+    svc = DropService(enable_cache=False)
+    svc.submit(x, CFG, zero_cost(), downstream="knn",
+               execute_downstream=True)
+    r = svc.run()[0]
+    assert r.error is not None and "downstream" in r.error
+    assert r.result is not None  # the reduction itself survived
+    assert r.downstream is None
+    assert svc.stats.downstream_failures == 1
+    assert svc.stats.downstream_runs == 0
+
+
+def test_execute_downstream_requires_task():
+    svc = DropService()
+    x = _datasets(1, rows=120, dim=12)[0]
+    with pytest.raises(ValueError, match="downstream"):
+        svc.submit(x, CFG, zero_cost(), execute_downstream=True)

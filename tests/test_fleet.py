@@ -238,6 +238,50 @@ def test_fleet_rebalance_moves_tenant_off_congested_slow_worker():
     assert r1.error is None and r2.error is None and r3.error is None
 
 
+def test_fleet_reprofile_recovers_degraded_link_placement():
+    """Stale link profiles: worker-0's link degrades right AFTER its
+    startup probe (the echo delay kicks in once the probe's pings are
+    spent), so the startup alpha stays optimistically tiny. The age-out
+    reprofile re-fits the link off the hot path; with the refreshed
+    alpha ~ delay/2, the measured-cost placement moves the tenant to the
+    healthy worker. The serve also rides the downstream-execution
+    protocol (``xds``) across the worker pipe."""
+    from repro.serve_drop.cache import dataset_fingerprint
+
+    x = _datasets(1)[0]
+    with FleetSupervisor(
+        workers=2,
+        reprofile_interval_s=0.3,
+        reprofile_after_serves=0,  # isolate the time-based age-out
+        worker_link_delays=[0.25],  # worker-0 only, >> any serve cost
+    ) as fleet:
+        r1 = fleet.result(fleet.submit(x, CFG), timeout=120)
+        assert r1.error is None
+        _wait(
+            lambda: fleet.link_profiles()["worker-0"].alpha_s > 0.05,
+            timeout_s=60.0,
+            what="reprofile to pick up worker-0's degraded RTT",
+        )
+        assert fleet.stats.reprofiles >= 1
+        # make the cost comparison deterministic: home the tenant on the
+        # degraded worker with a known serve estimate and unit speeds —
+        # cost_0 ~ 0.125 + 0.05 vs cost_1 ~ 0.05 clears the 0.7 margin
+        fp = dataset_fingerprint(np.ascontiguousarray(x, dtype=np.float32))
+        with fleet._lock:
+            fleet._tenant_home[fp] = 0
+            fleet._tenant_ref_s[fp] = 0.05
+            for w in fleet._workers:
+                w.speed = 1.0
+        r2 = fleet.result(
+            fleet.submit(x, CFG, downstream="knn", execute_downstream=True),
+            timeout=120,
+        )
+        assert r2.error is None
+        assert r2.worker == "worker-1"
+        assert fleet.stats.rebalances >= 1
+        assert r2.downstream is not None  # xds crossed the pipe
+
+
 # ---------------------------------------------------------- ingest bridge
 
 

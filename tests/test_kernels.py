@@ -200,8 +200,78 @@ def test_pairwise_dbscan_kernel_matches_ref(mq, mk, d):
 def test_pairwise_kde_kernel_matches_ref(mq, mk, d):
     x = _rand(jax.random.PRNGKey(10), (mk, d), jnp.float32)
     xq = x[:mq]
-    got = pairwise_kde_pallas(xq, x, mk, 0.5, interpret=True, **PR_BLOCKS)
+    sums, comps = pairwise_kde_pallas(xq, x, mk, 0.5, interpret=True, **PR_BLOCKS)
+    got = np.asarray(sums, np.float64) + np.asarray(comps, np.float64)
     want = pairwise_kde_ref(xq, x, mk, 0.5)
     np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-6
+        got, np.asarray(want), rtol=2e-5, atol=1e-6
     )
+
+
+# ------------------------------------------------- split-variant sweeps
+# The grid-parallel shard decomposition: per-shard partials from one
+# pallas_call must merge to exactly the sequential kernel's answer.
+
+from repro.kernels.pairwise_reduce.pairwise_reduce import (  # noqa: E402
+    pairwise_dbscan_split_pallas,
+    pairwise_kde_split_pallas,
+    pairwise_knn_split_pallas,
+)
+
+
+def _shard_pad(x, shards, bk):
+    """Tile-aligned shard padding, mirroring analytics.split._split_prepare."""
+    mk = x.shape[0]
+    nk = -(-mk // bk)
+    tps = -(-nk // shards)
+    rows = shards * tps * bk
+    return jnp.pad(x, ((0, rows - mk), (0, 0)))
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3])
+def test_pairwise_knn_split_kernel_merges_to_sequential(shards):
+    from repro.analytics.split import merge_knn_partials
+
+    x = np.array(_rand(jax.random.PRNGKey(11), (70, 6), jnp.float32))
+    x[40] = x[3]  # cross-shard duplicate: tie must keep the earlier shard
+    x = jnp.asarray(x)
+    xp = _shard_pad(x, shards, PR_BLOCKS["block_k"])
+    gi, gd = pairwise_knn_split_pallas(
+        x, xp, 70, shards, interpret=True, **PR_BLOCKS
+    )
+    idx, d2 = merge_knn_partials(np.asarray(gi), np.asarray(gd))
+    ri, rd = pairwise_knn_ref(x, x, 70)
+    np.testing.assert_array_equal(idx, np.asarray(ri))
+    np.testing.assert_allclose(d2, np.asarray(rd), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3])
+def test_pairwise_dbscan_split_kernel_merges_to_sequential(shards):
+    from repro.analytics.split import merge_dbscan_partials
+
+    x = _rand(jax.random.PRNGKey(12), (61, 7), jnp.float32)
+    xp = _shard_pad(x, shards, PR_BLOCKS["block_k"])
+    gc, gp = pairwise_dbscan_split_pallas(
+        x, xp, 61, 1.5 ** 2, shards, interpret=True, **PR_BLOCKS
+    )
+    counts, packed = merge_dbscan_partials(np.asarray(gc), np.asarray(gp))
+    rc, rp = pairwise_dbscan_ref(x, x, 61, 1.5 ** 2)
+    np.testing.assert_array_equal(counts, np.asarray(rc))
+    rp = np.asarray(rp)
+    w = min(packed.shape[1], rp.shape[1])
+    np.testing.assert_array_equal(packed[:, :w], rp[:, :w])
+    assert not packed[:, w:].any() and not rp[:, w:].any()
+
+
+@pytest.mark.parametrize("shards", [1, 2, 3])
+def test_pairwise_kde_split_kernel_merges_to_sequential(shards):
+    from repro.analytics.split import merge_kde_partials
+
+    x = _rand(jax.random.PRNGKey(13), (80, 5), jnp.float32)
+    xp = _shard_pad(x, shards, PR_BLOCKS["block_k"])
+    gs, gc = pairwise_kde_split_pallas(
+        x, xp, 80, 0.5, shards, interpret=True, **PR_BLOCKS
+    )
+    dens = merge_kde_partials(np.asarray(gs), np.asarray(gc), 80)
+    want = np.asarray(pairwise_kde_ref(x, x, 80, 0.5)) / 80.0
+    np.testing.assert_allclose(dens, want, rtol=2e-5, atol=1e-6)

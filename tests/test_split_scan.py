@@ -1,0 +1,410 @@
+"""Split-dataset pairwise fan-out: shard-merge associativity properties.
+
+The contract under test (``analytics/split.py``): for EVERY shard count,
+the split scan's merged output bit-matches the sequential fused engine —
+kNN indices and squared distances (including cross-shard duplicate
+tie-breaks), DBSCAN counts/packed words (hence labels), and KDE densities
+to ~f32 ulp (compensated partials folded in float64). Plus the two ride-
+along regressions: the f32 exp-sum drift fix (S2) and the block-size
+validation that replaced the opaque ``_pack_bits`` reshape crash (S3).
+
+The slow leg forces a 2-device host platform in a subprocess (XLA_FLAGS
+must precede the jax import) and checks the ``shard_map`` mesh fan-out
+against the same sequential oracle at both mesh shapes."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analytics import dbscan, gaussian_kde, nearest_neighbors
+from repro.analytics.pairwise import (
+    pairwise_dbscan,
+    pairwise_kde,
+    pairwise_knn,
+)
+from repro.analytics.split import (
+    merge_dbscan_partials,
+    merge_kde_partials,
+    merge_knn_partials,
+    split_pairwise_dbscan,
+    split_pairwise_kde,
+    split_pairwise_knn,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal installs: keep the module importable so the
+    HAVE_HYPOTHESIS = False  # deterministic sweeps still run
+
+    def given(**kw):  # noqa: D103 - inert stand-ins for the decorators
+        return lambda f: f
+
+    def settings(**kw):
+        return lambda f: f
+
+    class st:  # noqa: D101
+        integers = staticmethod(lambda **kw: None)
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="property sweeps need hypothesis (see requirements-dev.txt)",
+)
+SETTINGS = dict(max_examples=25, deadline=None)
+
+SHARDS = (1, 2, 3, 5, 7)
+B = 64  # one word-width tile: many tiles per shard even at 131 rows
+
+
+@pytest.fixture(scope="module")
+def xdup():
+    """131x8 with a duplicate pair straddling the shards>=3 boundary
+    (rows 3 and 100 land in different bk=64 tiles): every row's nearest
+    neighbor is tied between two columns somewhere in the sweep, so the
+    strict-< first-occurrence tie-break is load-bearing, not incidental."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(131, 8)).astype(np.float32)
+    x[100] = x[3]
+    return x
+
+
+def _rel(a, b):
+    return float(
+        np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12))
+    )
+
+
+# ------------------------------------------------- merge primitives (unit)
+
+
+def test_merge_knn_tie_keeps_lowest_shard():
+    # shard 1 ties shard 0 on d2: the sequential scan would have seen
+    # shard 0's column first, so the merge must keep it
+    idx = np.array([[3, 9], [100, 4]], dtype=np.int32)
+    d2 = np.array([[0.5, 2.0], [0.5, 1.0]], dtype=np.float32)
+    gi, gd = merge_knn_partials(idx, d2)
+    assert gi.tolist() == [3, 4]
+    assert gd.tolist() == [0.5, 1.0]
+
+
+def test_merge_dbscan_sums_counts_and_trims_words():
+    counts = np.array([[2, 0], [1, 3]], dtype=np.int32)
+    packed = np.arange(2 * 2 * 2, dtype=np.uint32).reshape(2, 2, 2)
+    c, p = merge_dbscan_partials(counts, packed, words=3)
+    assert c.tolist() == [3, 3]
+    assert p.shape == (2, 3)  # shard-order concat, trailing pad dropped
+    assert p.tolist() == [[0, 1, 4], [2, 3, 6]]
+
+
+def test_merge_kde_folds_in_float64():
+    # a compensation term far below f32 resolution of the sum must survive
+    sums = np.array([[1.0e8], [1.0]], dtype=np.float32)
+    comps = np.array([[0.25], [0.0]], dtype=np.float32)
+    dens = merge_kde_partials(sums, comps, m=1)
+    assert dens.dtype == np.float32
+    assert dens[0] == np.float32((1.0e8 + 0.25 + 1.0) / 1.0)
+
+
+# --------------------------------------------- deterministic parity sweeps
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+def test_split_knn_bit_matches_sequential(xdup, shards):
+    si, sd = pairwise_knn(xdup, B, B)
+    mi, md = split_pairwise_knn(xdup, shards=shards, block_q=B, block_k=B)
+    assert np.array_equal(si, mi)
+    assert np.array_equal(sd, md)
+
+
+def test_split_knn_cross_shard_duplicate_tie(xdup):
+    # rows 3 and 100 are identical; at shards=3 they sit in different
+    # shards, so the cross-shard merge decides their mutual tie
+    mi, md = split_pairwise_knn(xdup, shards=3, block_q=B, block_k=B)
+    assert mi[3] == 100 and mi[100] == 3
+    assert md[3] == 0.0 and md[100] == 0.0
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+def test_split_dbscan_bit_matches_sequential(xdup, shards):
+    eps = 1.5
+    sc, sp = pairwise_dbscan(xdup, eps, B, B)
+    mc, mp = split_pairwise_dbscan(
+        xdup, eps, shards=shards, block_q=B, block_k=B
+    )
+    assert np.array_equal(sc, mc)
+    assert sp.shape == mp.shape  # same sequential word layout, no shifts
+    assert np.array_equal(sp, mp)
+
+
+@pytest.mark.parametrize("shards", (2, 5))
+def test_split_dbscan_labels_through_wrapper(xdup, shards):
+    # counts+packed parity implies label parity only if the BFS consumes
+    # the merged outputs unchanged — pin the whole wrapper path
+    seq = dbscan(xdup, eps=1.5, min_samples=3, block=B)
+    spl = dbscan(xdup, eps=1.5, min_samples=3, block=B, split=shards)
+    assert np.array_equal(seq, spl)
+
+
+@pytest.mark.parametrize("shards", SHARDS)
+def test_split_kde_matches_sequential(xdup, shards):
+    seq = pairwise_kde(xdup, None, 1.0, B, B)
+    spl = split_pairwise_kde(
+        xdup, None, 1.0, shards=shards, block_q=B, block_k=B
+    )
+    assert _rel(spl, seq) <= 1e-5
+
+
+def test_split_kde_distinct_queries(xdup):
+    q = xdup[:17] + np.float32(0.25)
+    seq = pairwise_kde(xdup, q, 0.8, B, B)
+    for shards in (2, 3):
+        spl = split_pairwise_kde(
+            xdup, q, 0.8, shards=shards, block_q=B, block_k=B
+        )
+        assert spl.shape == (17,)
+        assert _rel(spl, seq) <= 1e-5
+
+
+# ----------------------------------------------------------- edge shapes
+
+
+@pytest.mark.parametrize("rows", (1, 2, 63, 97))
+def test_split_edge_shapes_padded_tails(rows):
+    """m=1, m below a tile, non-tile-multiple m — and shards exceeding the
+    tile count, so trailing shards are pure padding (inert partials)."""
+    rng = np.random.default_rng(rows)
+    x = rng.normal(size=(rows, 5)).astype(np.float32)
+    si, sd = pairwise_knn(x, B, B)
+    sc, sp = pairwise_dbscan(x, 1.0, B, B)
+    sk = pairwise_kde(x, None, 1.0, B, B)
+    for shards in (1, 4, 9):
+        mi, md = split_pairwise_knn(x, shards=shards, block_q=B, block_k=B)
+        assert np.array_equal(si, mi) and np.array_equal(sd, md)
+        mc, mp = split_pairwise_dbscan(
+            x, 1.0, shards=shards, block_q=B, block_k=B
+        )
+        assert np.array_equal(sc, mc) and np.array_equal(sp, mp)
+        mk = split_pairwise_kde(
+            x, None, 1.0, shards=shards, block_q=B, block_k=B
+        )
+        assert _rel(mk, sk) <= 1e-5
+
+
+def test_public_wrappers_split_kwarg(xdup):
+    assert np.array_equal(
+        nearest_neighbors(xdup, block=B),
+        nearest_neighbors(xdup, block=B, split=3),
+    )
+    assert _rel(
+        gaussian_kde(xdup, block=B, split=3), gaussian_kde(xdup, block=B)
+    ) <= 1e-5
+
+
+# ------------------------------------------------- kernel (interpret) path
+
+
+def test_split_kernel_path_parity_interpret(monkeypatch, xdup):
+    """use_kernels=True under REPRO_PALLAS_INTERPRET=1 routes to the
+    grid-parallel pairwise_reduce split variants; same merge, same bits."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    si, sd = pairwise_knn(xdup, B, B)
+    mi, md = split_pairwise_knn(
+        xdup, shards=3, block_q=B, block_k=B, use_kernels=True
+    )
+    assert np.array_equal(si, mi) and np.array_equal(sd, md)
+    sc, sp = pairwise_dbscan(xdup, 1.5, B, B)
+    mc, mp = split_pairwise_dbscan(
+        xdup, 1.5, shards=3, block_q=B, block_k=B, use_kernels=True
+    )
+    assert np.array_equal(sc, mc) and np.array_equal(sp, mp)
+    sk = pairwise_kde(xdup, None, 1.0, B, B)
+    mk = split_pairwise_kde(
+        xdup, None, 1.0, shards=3, block_q=B, block_k=B, use_kernels=True
+    )
+    assert _rel(mk, sk) <= 1e-5
+
+
+# ------------------------------------------------------- property sweeps
+
+
+@needs_hypothesis
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(min_value=1, max_value=160),
+    dim=st.integers(min_value=1, max_value=8),
+    shards=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_split_knn_dbscan_property(rows, dim, shards, seed):
+    """Arbitrary (rows, dim, shard count): split bit-matches sequential.
+    A planted duplicate keeps tie-breaks in play at every size."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(rows, dim)).astype(np.float32)
+    if rows >= 4:
+        x[rows // 2] = x[1]
+    si, sd = pairwise_knn(x, B, B)
+    mi, md = split_pairwise_knn(x, shards=shards, block_q=B, block_k=B)
+    assert np.array_equal(si, mi) and np.array_equal(sd, md)
+    eps = 0.5 * float(dim) ** 0.5
+    sc, sp = pairwise_dbscan(x, eps, B, B)
+    mc, mp = split_pairwise_dbscan(
+        x, eps, shards=shards, block_q=B, block_k=B
+    )
+    assert np.array_equal(sc, mc) and np.array_equal(sp, mp)
+
+
+@needs_hypothesis
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(min_value=1, max_value=160),
+    dim=st.integers(min_value=1, max_value=8),
+    shards=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_split_kde_property(rows, dim, shards, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(rows, dim)).astype(np.float32)
+    seq = pairwise_kde(x, None, 1.0, B, B)
+    spl = split_pairwise_kde(x, None, 1.0, shards=shards, block_q=B, block_k=B)
+    assert _rel(spl, seq) <= 1e-5
+
+
+# ------------------------------------------- S2: f32 exp-sum drift fix
+
+
+def test_kde_compensated_sum_resists_f32_drift():
+    """64 near points (exp ~ 1) plus 20k shell points (exp ~ 1e-7): the
+    old plain-f32 tile carry loses the small terms against the large
+    accumulator (the simulated pre-fix fold drifts ~1e-6 relative); the
+    compensated carry stays at f32-ulp agreement with a float64 host
+    reference, independent of the split point."""
+    rng = np.random.default_rng(0)
+    d = 4
+    near = (rng.normal(size=(64, d)) * 1e-3).astype(np.float32)
+    far = rng.normal(size=(20000, d)).astype(np.float32)
+    far *= 5.68 / np.linalg.norm(far, axis=1, keepdims=True)
+    x = np.concatenate([near, far]).astype(np.float32)
+    q = np.zeros((1, d), dtype=np.float32)
+
+    d2 = ((q.astype(np.float64) - x.astype(np.float64)) ** 2).sum(1)
+    ref = np.exp(-d2 / 2.0).sum() / x.shape[0]
+
+    dens = gaussian_kde(x, q, 1.0, block=256)
+    err_comp = abs(float(dens[0]) - ref) / ref
+    assert err_comp < 5e-7
+
+    # simulate the pre-fix algorithm: per-tile f32 sums folded into a
+    # plain (uncompensated) running f32 scalar, tile by tile
+    terms = np.exp(-d2.astype(np.float32) / np.float32(2.0))
+    acc = np.float32(0.0)
+    for i in range(0, terms.size, 256):
+        acc = np.float32(acc + terms[i : i + 256].sum(dtype=np.float32))
+    err_naive = abs(float(acc) / x.shape[0] - ref) / ref
+    assert err_naive > 5 * err_comp  # the fix is what closes the gap
+
+    # split-point independence: every shard count lands on the same value
+    vals = {
+        float(gaussian_kde(x, q, 1.0, block=256, split=s)[0])
+        for s in (1, 2, 3, 5)
+    }
+    assert all(abs(v - ref) / ref < 5e-7 for v in vals)
+
+
+# ------------------------------------------ S3: block-size validation
+
+
+def test_block_size_rejects_unusable_values():
+    x = np.zeros((8, 3), dtype=np.float32)
+    with pytest.raises(ValueError, match="block size"):
+        pairwise_dbscan(x, 0.5, 0, B)
+    with pytest.raises(ValueError, match="block size"):
+        pairwise_knn(x, B, -3)
+    with pytest.raises(ValueError, match="block size"):
+        pairwise_kde(x, None, 1.0, 2.5, B)
+    with pytest.raises(ValueError, match="block size"):
+        split_pairwise_dbscan(x, 0.5, shards=2, block_q=B, block_k=0)
+
+
+def test_block_size_rounds_up_and_matches():
+    """bk=100 used to crash in the bitmask packer's (bq, bk//32, 32)
+    reshape; it now quantizes to 128 and produces identical outputs."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(150, 4)).astype(np.float32)
+    c1, p1 = pairwise_dbscan(x, 1.0, 100, 100)
+    c2, p2 = pairwise_dbscan(x, 1.0, 128, 128)
+    assert np.array_equal(c1, c2) and np.array_equal(p1, p2)
+    assert np.array_equal(
+        dbscan(x, eps=1.0, min_samples=3, block=33),
+        dbscan(x, eps=1.0, min_samples=3, block=64),
+    )
+
+
+# ------------------------------------------------- mesh fan-out (slow)
+
+
+PROG = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import numpy as np
+import jax
+from repro.analytics.pairwise import (
+    pairwise_dbscan, pairwise_kde, pairwise_knn,
+)
+from repro.analytics.split import (
+    split_pairwise_dbscan, split_pairwise_kde, split_pairwise_knn,
+)
+
+rng = np.random.default_rng(0)
+x = rng.normal(size=(131, 6)).astype(np.float32)
+x[100] = x[3]  # cross-shard duplicate tie at the 64-row tile boundary
+eps = 1.2
+out = {"devices": jax.device_count()}
+si, sd = pairwise_knn(x, 64, 64)
+sc, sp = pairwise_dbscan(x, eps, 64, 64)
+sk = pairwise_kde(x, None, 1.0, 64, 64)
+for shape in ((1, 2), (2, 1)):
+    tag = "%dx%d" % shape
+    mi, md = split_pairwise_knn(
+        x, block_q=64, block_k=64, fanout="mesh", mesh_shape=shape)
+    mc, mp = split_pairwise_dbscan(
+        x, eps, block_q=64, block_k=64, fanout="mesh", mesh_shape=shape)
+    mk = split_pairwise_kde(
+        x, None, 1.0, block_q=64, block_k=64, fanout="mesh",
+        mesh_shape=shape)
+    out["knn_" + tag] = bool(
+        np.array_equal(si, mi) and np.array_equal(sd, md))
+    out["dbscan_" + tag] = bool(
+        np.array_equal(sc, mc) and np.array_equal(sp, mp))
+    out["kde_rel_" + tag] = float(
+        np.max(np.abs(mk - sk) / np.maximum(np.abs(sk), 1e-12)))
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_fanout_parity_forced_two_devices():
+    """shard_map fan-out on a forced 2-device host platform, both mesh
+    shapes (dataset-split 1x2 and query-split 2x1), against the
+    sequential oracle. Subprocess because XLA_FLAGS must be set before
+    jax initializes."""
+    proc = subprocess.run(
+        [sys.executable, "-c", PROG],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 2
+    for tag in ("1x2", "2x1"):
+        assert out[f"knn_{tag}"], out
+        assert out[f"dbscan_{tag}"], out
+        assert out[f"kde_rel_{tag}"] <= 1e-5, out
