@@ -28,6 +28,7 @@ MODULES = [
                               # worker scaling legs, 1 vs 2 workers)
     "bench_e2e_workload",     # §4.4 via WorkloadOptimizer: DR+analytics e2e
     "bench_incremental_stream",  # append-only: suffix update vs reval/refit
+    "bench_delta_stream",     # pub/sub deltas vs snapshot re-serve per append
     "bench_pairwise_analytics",  # fused engine vs legacy host loops
 
     "bench_mnist_like",       # §4.5: beyond time series

@@ -4,6 +4,7 @@ All three run on the shared fused tiled pairwise engine (``pairwise``);
 ``*_legacy`` variants keep the pre-engine host loops as parity oracles."""
 
 from repro.analytics.dbscan import dbscan, dbscan_legacy  # noqa: F401
+from repro.analytics.incremental import IncrementalAnalytics  # noqa: F401
 from repro.analytics.kde import gaussian_kde, gaussian_kde_legacy  # noqa: F401
 from repro.analytics.knn import (  # noqa: F401
     knn_retrieval_accuracy,

@@ -92,6 +92,21 @@ class SubspaceTracker:
     def width(self) -> int:
         return int(self.v.shape[1])
 
+    def rotation_from(self, v_served: np.ndarray) -> float:
+        """Rotation-stability signal: sine of the largest principal angle
+        between a served basis and this tracker's leading subspace of the
+        same rank. 0.0 means the served map still spans the tracked
+        directions exactly; 1.0 means some served direction left the tracked
+        span entirely. The delta-serving layer gates append-vs-rollback on
+        this — small rotations keep old transformed rows valid (TLB decides
+        final quality), large ones void every downstream cache."""
+        v_served = np.ascontiguousarray(np.asarray(v_served), dtype=np.float32)
+        k = min(v_served.shape[1], self.width)
+        vt = self.v[:, :k]
+        v_served = v_served[:, :k]
+        resid = v_served - vt @ (vt.T @ v_served)
+        return float(min(1.0, np.linalg.norm(resid, ord=2)))
+
     def merge(self, suffix: np.ndarray, max_rank: int) -> "SubspaceTracker":
         """Fold ``suffix`` rows into the tracked subspace (pure: returns a
         new tracker, so cache entries shared across threads never mutate).
@@ -191,6 +206,15 @@ def suffix_update(
         est, cfg.target_tlb, w, cfg
     )
     k = max(int(k), 1)
+    # Headroom exhaustion: a gate that only clears the target at the FULL
+    # tracked width is serving the merge's least-converged trailing columns
+    # with zero margin — the next append has no room to grow and quality
+    # degrades silently append over append. Treat it as unsatisfied so the
+    # caller falls back to a warm refit (and delta subscribers see a
+    # rollback), unless the width already spans the whole space (min(m, d)),
+    # where no refit could find more directions anyway.
+    if satisfied and k >= w and w < min(m, d):
+        satisfied = False
     result = ReduceResult(
         v=np.ascontiguousarray(merged.v[:, :k]),
         mean=merged.mean,

@@ -25,7 +25,12 @@ for a direct speedup figure. ``--grow-steps N`` switches to the append-only
 demo: one tenant's dataset grows by ``--grow-frac`` rows per step and each
 snapshot climbs the escalation ladder (prefix hit -> incremental suffix
 update -> cold refit as last resort; tune with ``--suffix-budget`` /
-``--no-suffix-update``). ``--use-kernels`` opts served queries into the
+``--no-suffix-update``). ``--subscribe`` is the pub/sub variant of the same
+stream: instead of re-submitting grown snapshots, it opens ONE delta
+subscription through the ingest front-end and applies the server-pushed
+``append``/``rollback`` deltas client-side (``SubscriberState``), so each
+append costs O(suffix) end-to-end — works against the in-process scheduler,
+the sharded mesh, and the process fleet alike. ``--use-kernels`` opts served queries into the
 Pallas kernel path end-to-end (fit matmuls + TLB validations; native on
 TPU, interpreter under ``REPRO_PALLAS_INTERPRET=1``, fused-jnp fallback on
 plain CPU — always safe to set).
@@ -81,6 +86,8 @@ from repro.serve_drop import (  # noqa: E402
     IngestFrontend,
     RetryLater,
     ShardedDropService,
+    SubscribeQuery,
+    SubscriberState,
 )
 
 
@@ -126,6 +133,67 @@ def _serve_append_stream(svc, args, method, cfg, cost) -> None:
           f"{svc.stats.suffix_updates} suffix updates "
           f"({svc.stats.suffix_update_failures} fell through), "
           f"{svc.stats.fit_calls} basis fits")
+
+
+def _delta_line(delta: dict, client: SubscriberState) -> str:
+    if delta["kind"] == "closed":
+        return f"  seq {delta['seq']:02d} [CLOSED  ] error={delta.get('error')}"
+    tag = ("APPEND  " if delta["kind"] == "append"
+           else f"ROLLBACK/{delta.get('reason', '?')}")
+    return (f"  seq {delta['seq']:02d} [{tag:8s}] "
+            f"rows={client.rows.shape[0]:6d} k={client.basis.k:3d} "
+            f"tlb={delta['tlb']:.4f} rot={delta['rotation']:.3f} "
+            f"wall={delta['wall_s'] * 1e3:7.1f} ms")
+
+
+def _serve_subscribe_stream(svc, args, method, cfg) -> None:
+    """--subscribe demo: ONE delta subscription on a growing tenant. The
+    server pushes the difference after each append — transformed suffix
+    rows plus O(suffix) downstream patches while the tracker's rotation
+    stays inside --rotation-tol (TLB-gated), a full restate when the basis
+    moved — and the client folds every delta into ``SubscriberState``. The
+    first delta is always the bootstrap rollback; unsubscribing delivers
+    the terminal ``closed``."""
+    append = max(1, int(args.rows * args.grow_frac))
+    steps = args.grow_steps if args.grow_steps > 0 else 5
+    m_total = args.rows + steps * append
+    x_full = sinusoid_mixture(m_total, args.dim, rank=5, seed=args.seed)[0]
+    print(f"pub/sub delta stream [{method}]: m0={args.rows} +{append} rows "
+          f"x {steps} appends (rotation tol {args.rotation_tol})")
+    client = SubscriberState()
+    t0 = time.perf_counter()
+    with IngestFrontend(svc, queue_capacity=args.queue_capacity) as fe:
+        sid = fe.subscribe(SubscribeQuery(
+            x=x_full[: args.rows], cfg=cfg, method=method,
+            rotation_tol=args.rotation_tol,
+        ))
+        delta = fe.next_delta(sid, timeout=300.0)  # bootstrap rollback
+        client.apply(delta)
+        print(_delta_line(delta, client))
+        for _ in range(steps):
+            lo = client.rows.shape[0]
+            fe.append(sid, x_full[lo: lo + append])
+            delta = fe.next_delta(sid, timeout=300.0)
+            client.apply(delta)
+            print(_delta_line(delta, client))
+        fe.unsubscribe(sid)
+        delta = fe.next_delta(sid, timeout=300.0)
+        client.apply(delta)
+        print(_delta_line(delta, client))
+    dt = time.perf_counter() - t0
+    grown = x_full[: client.rows.shape[0]]
+    err = float(np.max(np.abs(client.rows - client.basis.transform(grown))))
+    print(f"stream served in {dt*1e3:.0f} ms; client folded "
+          f"{client.appends} appends + {client.rollbacks} rollbacks "
+          f"-> {client.rows.shape[0]} rows @ k={client.basis.k}")
+    print(f"client-state parity vs basis.transform(grown): "
+          f"max |diff| = {err:.3e}"
+          + (" (bit-exact)" if err == 0.0 else ""))
+    stats = getattr(svc, "stats", None)
+    if stats is not None:
+        print(f"server: {stats.subscriptions} subscriptions, "
+              f"{stats.delta_serves} delta serves, "
+              f"{stats.rollbacks} rollbacks, {stats.failures} failures")
 
 
 def _submit_async(
@@ -194,6 +262,15 @@ def main() -> None:
                          "sequentially through the escalation ladder")
     ap.add_argument("--grow-frac", type=float, default=0.05,
                     help="per-append row growth for --grow-steps")
+    ap.add_argument("--subscribe", action="store_true",
+                    help="pub/sub demo: open ONE delta subscription on a "
+                         "growing tenant and stream server-pushed append/"
+                         "rollback deltas through the ingest front-end "
+                         "(O(suffix) per append; reuses --grow-steps/"
+                         "--grow-frac, default 5 appends)")
+    ap.add_argument("--rotation-tol", type=float, default=0.25,
+                    help="--subscribe append-vs-rollback gate on the "
+                         "tracker's principal-angle rotation signal")
     ap.add_argument("--devices", type=int, default=1,
                     help="mesh devices for the sharded scheduler (>1 forces "
                          "the host-platform device count on CPU)")
@@ -241,9 +318,10 @@ def main() -> None:
         if args.devices > 1:
             ap.error("--fleet (process workers) and --devices (in-process "
                      "mesh) are alternative scale-out modes; pick one")
-        if args.grow_steps > 0:
+        if args.grow_steps > 0 and not args.subscribe:
             ap.error("--grow-steps needs the in-process prefix cache; "
-                     "drop --fleet")
+                     "drop --fleet (or add --subscribe: delta "
+                     "subscriptions ARE fleet-capable)")
         # cost closures do not cross the process boundary: the workers
         # re-price the named downstream task themselves
         svc = FleetSupervisor(
@@ -280,6 +358,17 @@ def main() -> None:
             analytics_split=args.analytics_split,
             analytics_fanout=args.analytics_fanout or "xla",
         )
+    if args.subscribe:
+        if len(set(methods)) > 1:
+            ap.error("--subscribe serves ONE growing tenant; give a "
+                     "single --method")
+        try:
+            _serve_subscribe_stream(svc, args, methods[0], cfg)
+        finally:
+            if args.fleet:
+                svc.shutdown()
+        return
+
     if args.grow_steps > 0:
         if args.use_async:
             ap.error("--grow-steps is sequential by design (prefix matching "

@@ -13,6 +13,14 @@ from repro.serve_drop.cache import (  # noqa: F401
     BasisReuseCache,
     dataset_fingerprint,
 )
+from repro.serve_drop.delta import (  # noqa: F401
+    APPEND,
+    CLOSED,
+    ROLLBACK,
+    SubscribeQuery,
+    SubscriberState,
+    SubscriptionClosed,
+)
 from repro.serve_drop.fleet import (  # noqa: F401
     FleetSupervisor,
     LinkProfile,

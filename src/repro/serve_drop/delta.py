@@ -1,0 +1,168 @@
+"""Delta-serving protocol types: pub/sub subscriptions over append streams.
+
+The streaming gap this closes: PR 4 made the *basis* incremental
+(``core.subspace``), but a client of the request/response surface still
+re-submits the grown dataset after every append — re-transforming all m
+rows and re-running kNN/DBSCAN/KDE from scratch even when the served map
+did not move. The delta protocol makes the server push the DIFFERENCE
+instead, borrowing the append-only contract FlashToken uses for KV caches
+(an append either extends the cache or returns ``(rollback, to_append)``
+telling the consumer to rewind first):
+
+* ``{"kind": "append"}`` — the tracker absorbed the suffix with the served
+  rank/rotation stable (TLB-gated): carries the transformed suffix rows
+  plus O(suffix) downstream patches. Subscriber state extends in place.
+* ``{"kind": "rollback"}`` — the basis rotated (drift, headroom
+  exhaustion, or a warm refit): carries the new basis and a FULL restate
+  of transformed rows and downstream outputs. Subscriber state rebuilds.
+* ``{"kind": "closed"}`` — terminal: unsubscribe, frontend drain, or an
+  error (carried in ``error``). Nothing follows it.
+
+Ordering: deltas for one subscription are sequence-numbered and delivered
+in order, at most once (poll pops them). The first delta is always a
+rollback (``reason="subscribe"``) carrying the bootstrap state — a client
+needs no side channel to start. Every delta's compute is O(suffix) on the
+append path; rollbacks pay the cold cost exactly when a snapshot client
+would have had to anyway.
+
+``SubscriberState`` is the reference client: feed it every delta and its
+fields stay equal to a cold recompute over the grown dataset (the parity
+suite pins this bit-for-bit for transforms/kNN/labels and to compensated-
+sum tolerance for KDE densities).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.types import DropConfig, ReduceResult
+
+__all__ = [
+    "APPEND",
+    "ROLLBACK",
+    "CLOSED",
+    "SubscribeQuery",
+    "SubscriberState",
+    "SubscriptionClosed",
+]
+
+APPEND = "append"
+ROLLBACK = "rollback"
+CLOSED = "closed"
+
+
+class SubscriptionClosed(Exception):
+    """Raised by blocking delta waits once a subscription is terminal."""
+
+
+@dataclass
+class SubscribeQuery:
+    """One subscription request: serve ``x`` and keep serving deltas as it
+    grows. ``rotation_tol`` is the append-vs-rollback gate on the tracker's
+    rotation signal (``SubspaceTracker.rotation_from``): sines below it keep
+    old transformed rows valid enough for the TLB revalidation to have the
+    final word; above it the basis moved and subscribers must rebuild."""
+
+    x: np.ndarray
+    cfg: DropConfig = field(default_factory=DropConfig)
+    method: str = "pca"
+    # downstream analytics maintained per-subscription (analytics.incremental)
+    eps: float = 0.5
+    min_samples: int = 5
+    bandwidth: float = 1.0
+    rotation_tol: float = 0.25
+
+
+@dataclass(eq=False)  # identity semantics, like the service's work items
+class _Subscription:
+    """Server-side subscription record (owned by ``DropService``; every
+    field mutation happens under the scheduler lock except the compute that
+    produces it)."""
+
+    sub_id: int
+    query: SubscribeQuery
+    x: np.ndarray  # grown dataset: rows folded into served state so far
+    state: str = "pending"  # pending (bootstrapping) | live | closed
+    seq: int = 0  # next delta sequence number
+    result: ReduceResult | None = None  # currently served map
+    tracker: object = None  # SubspaceTracker (None for non-pca methods)
+    analytics: object = None  # IncrementalAnalytics
+    deltas: deque = field(default_factory=deque)  # emitted, not yet polled
+    pending_suffixes: deque = field(default_factory=deque)  # not yet served
+    inflight: bool = False  # a _DeltaServe item for this sub is scheduled
+    close_requested: bool = False  # unsubscribe arrived mid-flight
+    error: str | None = None
+    boot_qid: int | None = None  # bootstrap ReduceQuery id (pending state)
+
+
+class SubscriberState:
+    """Reference delta consumer: applies the protocol and exposes the same
+    outputs a cold ``optimize + transform + analytics`` pass would give.
+
+    Raises on protocol violations (out-of-order seq, append before
+    bootstrap) so tests and demos catch server bugs instead of absorbing
+    them."""
+
+    def __init__(self) -> None:
+        self.basis: ReduceResult | None = None
+        self.rows: np.ndarray | None = None  # transformed rows (m, k)
+        self.knn_idx: np.ndarray | None = None
+        self.knn_d2: np.ndarray | None = None
+        self.labels: np.ndarray | None = None
+        self.densities: np.ndarray | None = None
+        self.closed = False
+        self.error: str | None = None
+        self.appends = 0
+        self.rollbacks = 0
+        self._next_seq = 0
+
+    def apply(self, delta: dict) -> None:
+        if self.closed:
+            raise SubscriptionClosed("delta after closed")
+        seq = int(delta["seq"])
+        if seq != self._next_seq:
+            raise ValueError(
+                f"out-of-order delta: expected seq {self._next_seq}, got {seq}"
+            )
+        self._next_seq = seq + 1
+        kind = delta["kind"]
+        if kind == CLOSED:
+            self.closed = True
+            self.error = delta.get("error")
+            return
+        if kind == ROLLBACK:
+            self.rollbacks += 1
+            self.basis = delta["basis"]
+            self.rows = np.asarray(delta["rows"])
+            knn = delta["knn"]
+            self.knn_idx = np.asarray(knn["idx"])
+            self.knn_d2 = np.asarray(knn["d2"])
+            self.labels = np.asarray(delta["labels"])
+            self.densities = np.asarray(delta["densities"])
+            return
+        if kind != APPEND:
+            raise ValueError(f"unknown delta kind {kind!r}")
+        if self.rows is None:
+            raise ValueError("append delta before bootstrap rollback")
+        self.appends += 1
+        base = int(delta["base_rows"])
+        if base != self.rows.shape[0]:
+            raise ValueError(
+                f"append base {base} != held rows {self.rows.shape[0]}"
+            )
+        self.rows = np.concatenate([self.rows, np.asarray(delta["rows"])])
+        knn = delta["knn"]
+        changed = np.asarray(knn["changed"], dtype=np.int64)
+        self.knn_idx = np.concatenate(
+            [self.knn_idx, np.asarray(knn["append_idx"])]
+        )
+        self.knn_d2 = np.concatenate(
+            [self.knn_d2, np.asarray(knn["append_d2"])]
+        )
+        self.knn_idx[changed] = np.asarray(knn["idx"])
+        self.knn_d2[changed] = np.asarray(knn["d2"])
+        self.labels = np.asarray(delta["labels"])
+        self.densities = np.asarray(delta["densities"])

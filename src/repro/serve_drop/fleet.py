@@ -231,6 +231,7 @@ def _worker_main(argv: list[str]) -> None:
 
     from repro.core.types import ReduceResult
     from repro.fault.faults import FailureInjector, NodeFailure
+    from repro.serve_drop.delta import SubscribeQuery
     from repro.serve_drop.service import DropService, ServeResult
 
     svc = DropService(enable_cache=not args.no_cache)
@@ -254,6 +255,25 @@ def _worker_main(argv: list[str]) -> None:
 
     served = 0
     pings = 0
+    # delta subscriptions homed on this worker: supervisor sid -> local sid.
+    # Deltas are flushed after every message that can produce them and
+    # forwarded as framed "delta" messages; the local service's sequence
+    # numbers pass through unchanged (one worker owns a subscription for
+    # its whole life — a worker death closes it at the supervisor).
+    subs: dict[int, int] = {}
+
+    def flush_subs() -> None:
+        for sid, lid in list(subs.items()):
+            for dlt in svc.poll_deltas(lid):
+                send({"t": "delta", "sid": sid, "delta": dlt})
+
+    def sub_error(sid: int, exc: BaseException) -> None:
+        # seq=None: the supervisor stamps the next sequence number itself
+        send({"t": "delta", "sid": sid, "delta": {
+            "kind": "closed", "seq": None,
+            "error": f"{type(exc).__name__}: {exc}",
+        }})
+
     while True:
         msg = _recv_frame(inp)
         if msg is None or msg["t"] == "stop":
@@ -292,6 +312,39 @@ def _worker_main(argv: list[str]) -> None:
                 )
             send({"t": "res", "qid": msg["qid"], "res": res,
                   "serve_s": time.perf_counter() - t0})
+            flush_subs()  # a query drain may also land pending delta work
+        elif t == "sub":
+            try:
+                lid = svc.subscribe(SubscribeQuery(
+                    x=msg["x"], cfg=msg["cfg"], method=msg["method"],
+                    eps=msg["eps"], min_samples=msg["min_samples"],
+                    bandwidth=msg["bandwidth"],
+                    rotation_tol=msg["rotation_tol"],
+                ))
+                subs[msg["sid"]] = lid
+                while svc.poll():
+                    pass
+            except Exception as exc:
+                sub_error(msg["sid"], exc)
+            flush_subs()
+        elif t == "app":
+            try:
+                svc.append(subs[msg["sid"]], msg["x"])
+                while svc.poll():
+                    pass
+            except Exception as exc:
+                sub_error(msg["sid"], exc)
+            flush_subs()
+        elif t == "unsub":
+            lid = subs.get(msg["sid"])
+            if lid is not None:
+                try:
+                    svc.unsubscribe(lid)
+                    while svc.poll():
+                        pass
+                except Exception:
+                    pass  # supervisor already fabricated the closed delta
+            flush_subs()
     stop_hb.set()
     os._exit(0)
 
@@ -309,6 +362,20 @@ class LinkProfile:
 
     def seconds(self, nbytes: int) -> float:
         return self.alpha_s + self.beta_s_per_byte * float(nbytes)
+
+
+@dataclass(eq=False)
+class _FleetSub:
+    """Supervisor-side record of one delta subscription (homed on one
+    worker for life; a worker death closes it with an error delta)."""
+
+    sid: int
+    worker: int  # index of the home worker
+    fp: str
+    state: str = "pending"  # pending | live | closed
+    next_seq: int = 0  # stamps supervisor-fabricated closed deltas
+    deltas: deque = field(default_factory=deque)
+    error: str | None = None
 
 
 @dataclass(eq=False)
@@ -427,6 +494,9 @@ class FleetSupervisor:
         self.startup_timeout_s = startup_timeout_s
         self.stats = ServiceStats()
         self.on_result = None  # ingest hook, fired with no lock held
+        self.on_delta = None  # delta hook, fired with no lock held
+        self._subs: dict[int, _FleetSub] = {}
+        self._next_sub_id = 0
 
         cores = self._core_partition(n) if pin_cores else [None] * n
         self._workers = [_Worker(i, cores[i]) for i in range(n)]
@@ -707,6 +777,8 @@ class FleetSupervisor:
                 w.ready_evt.set()
             elif t == "res":
                 self._commit_result(w, proc, msg)
+            elif t == "delta":
+                self._commit_delta(w, proc, msg)
             elif t in ("pong", "prof"):
                 with self._lock:
                     pending = w.rpc.pop(msg.get("n"), None)
@@ -905,6 +977,140 @@ class FleetSupervisor:
                 raise TimeoutError(f"query {qid} still pending")
             time.sleep(0.002)
 
+    # ------------------------------------------------------------- pub/sub
+
+    def subscribe(self, query) -> int:
+        """Open a delta subscription (``delta.SubscribeQuery``), homed on
+        one worker for its whole life: the worker runs the full delta
+        subsystem locally (tracker, incremental analytics) and streams
+        framed ``delta`` messages back; the supervisor only routes. A home
+        worker's death closes its subscriptions with an error delta — a
+        delta consumer is never left hanging, same contract as queries."""
+        import numpy as np
+
+        from repro.serve_drop.cache import dataset_fingerprint
+        from repro.serve_drop.delta import SubscribeQuery
+
+        if not self._started:
+            self.start()
+        if not isinstance(query, SubscribeQuery):
+            raise TypeError("fleet.subscribe takes a SubscribeQuery")
+        x = np.ascontiguousarray(np.asarray(query.x), dtype=np.float32)
+        fp = dataset_fingerprint(x)
+        with self._lock:
+            live = self._live()
+            if not live:
+                raise RuntimeError("no live workers to home the subscription")
+            home_i = self._tenant_home.get(fp)
+            if home_i is not None and self._workers[home_i].state == "ready":
+                w = self._workers[home_i]  # warm cache: same data, same home
+            else:
+                w = min(live, key=lambda c: (len(c.assigned), c.index))
+                self._tenant_home[fp] = w.index
+            sid = self._next_sub_id
+            self._next_sub_id += 1
+            self._subs[sid] = _FleetSub(sid=sid, worker=w.index, fp=fp)
+            self.stats.subscriptions += 1
+            w.outbox.put({
+                "t": "sub", "sid": sid, "x": x, "cfg": query.cfg,
+                "method": query.method, "eps": query.eps,
+                "min_samples": query.min_samples,
+                "bandwidth": query.bandwidth,
+                "rotation_tol": query.rotation_tol,
+            })
+        return sid
+
+    def append(self, sub_id: int, suffix) -> None:
+        import numpy as np
+
+        from repro.serve_drop.delta import SubscriptionClosed
+
+        suffix = np.ascontiguousarray(np.asarray(suffix), dtype=np.float32)
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None or sub.state == "closed":
+                raise SubscriptionClosed(f"subscription {sub_id} is closed")
+            self._workers[sub.worker].outbox.put(
+                {"t": "app", "sid": sub_id, "x": suffix}
+            )
+
+    def poll_deltas(self, sub_id: int, max_n: int | None = None) -> list:
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None:
+                raise KeyError(f"unknown subscription {sub_id}")
+            out: list = []
+            while sub.deltas and (max_n is None or len(out) < max_n):
+                out.append(sub.deltas.popleft())
+            return out
+
+    def unsubscribe(self, sub_id: int, *, force: bool = False) -> None:
+        """Ask the home worker to close the subscription (its final
+        ``closed`` delta flows back framed). ``force=True`` additionally
+        fabricates the terminal delta NOW — late worker emissions for a
+        closed sub are dropped — so drain paths terminate deterministically
+        even when the home worker is wedged."""
+        notify = False
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None or sub.state == "closed":
+                return
+            w = self._workers[sub.worker]
+            if w.state == "ready" and not force:
+                w.outbox.put({"t": "unsub", "sid": sub_id})
+            else:
+                if w.state == "ready":
+                    w.outbox.put({"t": "unsub", "sid": sub_id})
+                self._close_sub(sub, None)
+                notify = True
+        if notify:
+            self._notify_delta(sub_id)
+
+    def live_subscriptions(self) -> list[int]:
+        with self._lock:
+            return [
+                sid for sid, sub in self._subs.items()
+                if sub.state != "closed"
+            ]
+
+    def _close_sub(self, sub: _FleetSub, error: str | None) -> None:
+        """Fabricate the terminal delta (caller holds the lock)."""
+        sub.deltas.append(
+            {"kind": "closed", "seq": sub.next_seq, "error": error}
+        )
+        sub.next_seq += 1
+        sub.state = "closed"
+        sub.error = error
+
+    def _notify_delta(self, sub_id: int) -> None:
+        cb = self.on_delta
+        if cb is not None:
+            cb(sub_id)
+
+    def _commit_delta(self, w: _Worker, proc, msg: dict) -> None:
+        sid = msg["sid"]
+        dlt = msg["delta"]
+        with self._lock:
+            sub = self._subs.get(sid)
+            if sub is None or sub.state == "closed" or proc is not w.proc:
+                return  # late emission for a closed/stale sub: drop it
+            if dlt.get("seq") is None:  # worker-side failure path
+                dlt["seq"] = sub.next_seq
+            sub.next_seq = int(dlt["seq"]) + 1
+            sub.deltas.append(dlt)
+            kind = dlt.get("kind")
+            if kind == "closed":
+                sub.state = "closed"
+                sub.error = dlt.get("error")
+            else:
+                if sub.state == "pending":
+                    sub.state = "live"
+                if kind == "append":
+                    self.stats.delta_serves += 1
+                elif kind == "rollback" and dlt.get("reason") != "subscribe":
+                    self.stats.rollbacks += 1
+        self._notify_delta(sid)
+
     # ---------------------------------------------------------- supervision
 
     def _monitor_loop(self) -> None:
@@ -953,8 +1159,12 @@ class FleetSupervisor:
     def _handle_death(self, w: _Worker, proc, why: str) -> None:
         """A worker died (or was killed as hung): requeue or fail its
         in-flight queries so no client ever hangs, then schedule the
-        restart under the RestartPolicy."""
+        restart under the RestartPolicy. Subscriptions homed on the dead
+        worker carry state a restart cannot recover (tracker + incremental
+        analytics live in the dead process), so they close with an error
+        delta — the subscriber re-subscribes and bootstraps fresh."""
         failed: list[int] = []
+        dead_subs: list[int] = []
         with self._lock:
             if proc is not w.proc or w.state in ("dead", "restarting", "lost"):
                 return
@@ -968,6 +1178,13 @@ class FleetSupervisor:
             orphans = list(w.assigned.values())
             w.assigned.clear()
             exitcode = proc.poll()
+            for sub in self._subs.values():
+                if sub.worker == w.index and sub.state != "closed":
+                    self._close_sub(
+                        sub, f"{w.label} died ({why}, exit={exitcode})"
+                    )
+                    self.stats.failures += 1
+                    dead_subs.append(sub.sid)
             for fq in orphans:
                 if fq.qid in self._results:
                     continue
@@ -1007,6 +1224,8 @@ class FleetSupervisor:
                 )
         for qid in failed:
             self._notify(qid)
+        for sid in dead_subs:
+            self._notify_delta(sid)
 
     def _fail_query(self, fq: _FleetQuery, error: str) -> None:
         """Finish a query with ServeResult.error (caller holds the lock)."""

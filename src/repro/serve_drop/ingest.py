@@ -30,6 +30,7 @@ from collections import deque
 import numpy as np
 
 from repro.core.types import CostFn, DropConfig
+from repro.serve_drop.delta import SubscribeQuery, SubscriptionClosed
 from repro.serve_drop.service import DropService, ServeResult
 
 
@@ -66,11 +67,14 @@ class IngestFrontend:
         self.queue_capacity = max(int(queue_capacity), 1)
         self._wake = threading.Condition()  # drain threads sleep here
         self._done = threading.Condition()  # result() waiters sleep here
+        self._delta = threading.Condition()  # next_delta() waiters sleep here
         self._stop = threading.Event()  # drain threads exit on this
         self._closing = threading.Event()  # submits reject on this first
         self._threads: list[threading.Thread] = []
         self._recent_walls: deque[float] = deque(maxlen=32)
         service.on_result = self._on_result
+        if hasattr(service, "on_delta"):
+            service.on_delta = self._on_delta
 
     # ------------------------------------------------------------ lifecycle
 
@@ -107,8 +111,21 @@ class IngestFrontend:
         backlog that has not moved for ``progress_deadline_s`` (a wedged
         scheduler — e.g. every drain tick raising) is abandoned so close()
         always returns. Queries stranded that way stay unresolved in the
-        service; ``stats.drain_failures`` records the ticks that raised."""
+        service; ``stats.drain_failures`` records the ticks that raised.
+
+        Live subscriptions terminate deterministically: close() requests an
+        orderly unsubscribe up front (in-flight deltas still deliver, then
+        the final ``closed``), and any subscription still live once the
+        drain ends — including the wedged-scheduler path — is force-closed,
+        so every subscriber sees a terminal delta and no ``next_delta``
+        waiter is left stranded."""
         self._closing.set()  # reject new submits before waiting on backlog
+        live_subs = getattr(self.service, "live_subscriptions", None)
+        unsubscribe = getattr(self.service, "unsubscribe", None)
+        if live_subs is not None and unsubscribe is not None:
+            for sid in live_subs():
+                # orderly: queued suffixes drop, in-flight work lands first
+                unsubscribe(sid)
         if drain and self._threads:
             last = self.service.backlog()
             t_last = time.perf_counter()
@@ -136,6 +153,14 @@ class IngestFrontend:
                     with self.service._lock:
                         self.service.stats.drain_failures += 1
                     break
+        if live_subs is not None and unsubscribe is not None:
+            for sid in live_subs():
+                # still live after the drain (wedged scheduler, or drain
+                # was False): force the terminal delta NOW — a stranded
+                # in-flight emission is dropped by the closed state
+                unsubscribe(sid, force=True)
+        with self._delta:  # belt and braces: no waiter sleeps past close
+            self._delta.notify_all()
 
     def __enter__(self) -> "IngestFrontend":
         return self.start()
@@ -185,6 +210,86 @@ class IngestFrontend:
             per_query = 0.05
         width = max(self.drain_width, 1)
         return max(0.005, per_query * max(backlog, 1) / width / 4)
+
+    # -------------------------------------------------------------- pub/sub
+
+    def subscribe(
+        self,
+        x: np.ndarray | SubscribeQuery,
+        cfg: DropConfig | None = None,
+        *,
+        method: str = "pca",
+        eps: float = 0.5,
+        min_samples: int = 5,
+        bandwidth: float = 1.0,
+        rotation_tol: float = 0.25,
+    ) -> int:
+        """Open a delta subscription (``x`` may be a dataset or a prebuilt
+        ``SubscribeQuery``). The first delta — a ``rollback`` with reason
+        ``"subscribe"`` carrying the full bootstrap state — arrives via
+        ``next_delta``/``poll_deltas`` once the scheduler serves the
+        reduction. Raises ``RetryLater`` when the frontend is closing."""
+        if self._closing.is_set() or self._stop.is_set():
+            backlog = self.service.backlog()
+            raise RetryLater(self._retry_after(backlog), backlog)
+        if isinstance(x, SubscribeQuery):
+            query = x
+        else:
+            query = SubscribeQuery(
+                x=x, cfg=cfg or DropConfig(), method=method, eps=eps,
+                min_samples=min_samples, bandwidth=bandwidth,
+                rotation_tol=rotation_tol,
+            )
+        sid = self.service.subscribe(query)
+        with self._wake:
+            self._wake.notify_all()
+        return sid
+
+    def append(self, sub_id: int, suffix: np.ndarray) -> None:
+        """Queue appended rows on a subscription from any thread; the
+        resulting delta arrives asynchronously. Raises
+        ``SubscriptionClosed`` once the subscription is terminal."""
+        self.service.append(sub_id, suffix)
+        with self._wake:
+            self._wake.notify_all()
+
+    def poll_deltas(self, sub_id: int, max_n: int | None = None) -> list:
+        """Non-blocking: pop whatever deltas have been emitted (in order,
+        at most once)."""
+        return self.service.poll_deltas(sub_id, max_n=max_n)
+
+    def next_delta(self, sub_id: int, timeout: float | None = None) -> dict:
+        """Block until the subscription's next delta; the final ``closed``
+        delta is delivered like any other, after which this raises
+        ``SubscriptionClosed``. Raises TimeoutError on expiry."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._delta:
+            while True:
+                got = self.service.poll_deltas(sub_id, max_n=1)
+                if got:
+                    return got[0]
+                if sub_id not in self.service.live_subscriptions():
+                    raise SubscriptionClosed(
+                        f"subscription {sub_id} is closed"
+                    )
+                remaining = (
+                    None if deadline is None
+                    else deadline - time.perf_counter()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"subscription {sub_id}: no delta")
+                # like result(): _on_delta serializes behind _delta, so no
+                # wakeup can be lost between the poll and the wait
+                self._delta.wait(
+                    timeout=0.05 if remaining is None else min(remaining, 0.05)
+                )
+
+    def unsubscribe(self, sub_id: int) -> None:
+        self.service.unsubscribe(sub_id)
+
+    def _on_delta(self, sub_id: int) -> None:
+        with self._delta:
+            self._delta.notify_all()
 
     # ------------------------------------------------------------- results
 

@@ -58,13 +58,25 @@ import numpy as np
 
 from repro.core.bucketing import DEFAULT_BUCKETS, ShapeBucketCache
 from repro.core.reducer import Reducer, make_reducer, method_cacheable
-from repro.core.subspace import suffix_update as subspace_suffix_update
+from repro.core.subspace import (
+    TRACK_HEADROOM,
+    SubspaceTracker,
+    suffix_update as subspace_suffix_update,
+)
 from repro.core.tlb import TLBEstimator
 from repro.core.types import CostFn, DropConfig, ReduceResult
 from repro.serve_drop.cache import (
     BasisCacheEntry,
     BasisReuseCache,
     dataset_fingerprint,
+)
+from repro.serve_drop.delta import (
+    APPEND,
+    CLOSED,
+    ROLLBACK,
+    SubscribeQuery,
+    SubscriptionClosed,
+    _Subscription,
 )
 
 
@@ -125,6 +137,10 @@ class ServiceStats:
     suffix_update_failures: int = 0  # updates that fell through (or raised)
     downstream_runs: int = 0  # served analytics executions (execute_downstream)
     downstream_failures: int = 0  # analytics executions that raised
+    # delta-serving (serve_drop.delta): pub/sub subscription counters
+    subscriptions: int = 0  # subscribe() calls accepted
+    delta_serves: int = 0  # append deltas served (O(suffix) path)
+    rollbacks: int = 0  # rollback deltas forced by appends (drift/headroom/refit)
     failures: int = 0  # queries finished with ServeResult.error set
     rejected: int = 0  # ingest backpressure rejections (reject-with-retry-after)
     steals: int = 0  # runners migrated to an idle device between rounds
@@ -184,6 +200,33 @@ class _SuffixUpdate:
     fingerprint: str
     t0: float
     device: object = None  # mesh device to update on (sharded)
+
+
+@dataclass(eq=False)
+class _DeltaServe:
+    """A pending delta computation for one subscription: either the
+    bootstrap (the subscription's reduction finished — ``base`` holds it —
+    and the initial transformed rows + downstream state must build) or an
+    append (fold queued suffixes into the served state and emit an append
+    or rollback delta). Device compute, scheduled through the validation
+    deque like every other off-lock work item; at most ONE is in flight per
+    subscription, so the delta chain is serialized and sequence numbers
+    never race. A raising compute closes the subscription with an error
+    delta — never wedging the drain."""
+
+    sub: _Subscription
+    kind: str  # "bootstrap" | "append"
+    t0: float
+    suffixes: list = field(default_factory=list)  # append: queued suffix rows
+    base: ServeResult | None = None  # bootstrap: the finished reduction
+    device: object = None  # mesh device to compute on (sharded)
+
+    @property
+    def fingerprint(self) -> str:
+        # never dedup-matches a query (real fingerprints are sha1 hex), so
+        # admission's `_fingerprint_inflight` short-circuits before touching
+        # the `.query` attribute this item does not have
+        return ""
 
 
 @dataclass(eq=False)
@@ -267,6 +310,15 @@ class DropService:
         # ingest hook: called with each finished query id, with NO scheduler
         # lock held (a waiter may re-enter take_result from the callback)
         self.on_result: Callable[[int], None] | None = None
+        # delta-serving state: subscriptions by id, plus the map from a
+        # bootstrap ReduceQuery's id to its subscription (consumed by
+        # _notify, which turns the finished reduction into the first delta)
+        self._subs: dict[int, _Subscription] = {}
+        self._sub_boot: dict[int, _Subscription] = {}
+        self._next_sub_id = 0
+        # delta hook: called with each subscription id that gained deltas,
+        # with NO scheduler lock held (mirror of on_result)
+        self.on_delta: Callable[[int], None] | None = None
 
     # ------------------------------------------------------------- intake
 
@@ -362,6 +414,133 @@ class DropService:
         """Pop one finished result by query id (None while still pending)."""
         with self._lock:
             return self._results.pop(qid, None)
+
+    # ------------------------------------------------------ delta serving
+
+    def subscribe(self, query: SubscribeQuery) -> int:
+        """Open a subscription: serve ``query.x`` once (a normal reduction
+        through the scheduler) and then push deltas as appends arrive. The
+        first delta is always a ``rollback`` with ``reason="subscribe"``
+        carrying the bootstrap state. Returns the subscription id."""
+        x = np.ascontiguousarray(np.asarray(query.x), dtype=np.float32)
+        if x.ndim != 2:
+            raise ValueError(f"expected (m, d) dataset, got shape {x.shape}")
+        query.x = x
+        with self._lock:
+            sid = self._next_sub_id
+            self._next_sub_id += 1
+            sub = _Subscription(sub_id=sid, query=query, x=x)
+            self._subs[sid] = sub
+            self.stats.subscriptions += 1
+            # submit + boot-map registration are one critical section (the
+            # lock is reentrant), so a concurrent drain thread cannot finish
+            # the bootstrap query before _notify knows it belongs to a sub
+            qid = self.try_submit(x, query.cfg, None, method=query.method)
+            sub.boot_qid = qid
+            self._sub_boot[qid] = sub
+        return sid
+
+    def append(self, sub_id: int, suffix: np.ndarray) -> None:
+        """Queue appended rows for a subscription. The scheduler folds them
+        in as one delta (consecutive appends between ticks batch); the
+        subscriber sees either an O(suffix) ``append`` delta or a
+        ``rollback`` when the basis had to move."""
+        suffix = np.ascontiguousarray(np.asarray(suffix), dtype=np.float32)
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None or sub.state == "closed":
+                raise SubscriptionClosed(f"subscription {sub_id} is closed")
+            if suffix.ndim != 2 or suffix.shape[1] != sub.x.shape[1]:
+                raise ValueError(
+                    f"suffix shape {suffix.shape} does not extend a "
+                    f"{sub.x.shape[1]}-dim subscription"
+                )
+            if suffix.shape[0] == 0:
+                return
+            sub.pending_suffixes.append(suffix)
+            self._maybe_schedule_delta(sub)
+
+    def poll_deltas(self, sub_id: int, max_n: int | None = None) -> list:
+        """Pop emitted deltas for a subscription, in sequence order, at most
+        once. Unknown ids raise KeyError (a closed-and-drained subscription
+        stays known until the process ends — ids are never reused)."""
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None:
+                raise KeyError(f"unknown subscription {sub_id}")
+            out: list = []
+            while sub.deltas and (max_n is None or len(out) < max_n):
+                out.append(sub.deltas.popleft())
+            return out
+
+    def unsubscribe(self, sub_id: int, *, force: bool = False) -> None:
+        """Close a subscription: drops queued suffixes and emits a final
+        ``closed`` delta. With work in flight the close is deferred until
+        the flight lands (its delta still delivers, then the close) unless
+        ``force=True``, which closes immediately and discards the in-flight
+        emission — the drain path uses force so no subscription can hold
+        ``close()`` hostage."""
+        with self._lock:
+            sub = self._subs.get(sub_id)
+            if sub is None or sub.state == "closed":
+                return
+            sub.pending_suffixes.clear()
+            if (sub.inflight or sub.state == "pending") and not force:
+                sub.close_requested = True
+                notify = None
+            else:
+                notify = self._emit(sub, {"kind": CLOSED, "error": None})
+        self._fire_deltas([] if notify is None else [notify])
+
+    def live_subscriptions(self) -> list[int]:
+        with self._lock:
+            return [
+                sid for sid, sub in self._subs.items()
+                if sub.state != "closed"
+            ]
+
+    def _maybe_schedule_delta(self, sub: _Subscription) -> None:
+        """Schedule ONE append work item when the subscription is live, has
+        queued suffixes, and nothing for it is in flight (the chain is
+        strictly serial per subscription). Caller holds the lock."""
+        if (
+            sub.state != "live"
+            or sub.inflight
+            or sub.close_requested
+            or not sub.pending_suffixes
+        ):
+            return
+        item = _DeltaServe(
+            sub=sub, kind="append", t0=time.perf_counter(),
+            suffixes=list(sub.pending_suffixes),
+        )
+        sub.pending_suffixes.clear()
+        sub.inflight = True
+        self._place_validation(item)  # sharded: pick a device
+        self._validations.append(item)
+
+    def _emit(self, sub: _Subscription, delta: dict) -> int | None:
+        """Sequence-stamp and queue one delta; returns the sub id to notify
+        (None when the subscription already closed — emissions from a
+        stranded in-flight item are dropped, preserving at-most-once with
+        ``closed`` terminal). Caller holds the lock."""
+        if sub.state == "closed":
+            return None
+        delta["seq"] = sub.seq
+        sub.seq += 1
+        sub.deltas.append(delta)
+        if delta["kind"] == CLOSED:
+            sub.state = "closed"
+            sub.error = delta.get("error")
+            sub.pending_suffixes.clear()
+        return sub.sub_id
+
+    def _fire_deltas(self, sub_ids: list[int]) -> None:
+        """Fire the delta hook with no scheduler lock held (same lock-order
+        contract as ``_notify``)."""
+        if self.on_delta is not None:
+            for sid in sub_ids:
+                self.on_delta(sid)
 
     # ------------------------------------------------------ cache serving
 
@@ -679,10 +858,44 @@ class DropService:
 
     def _notify(self, qids: list[int]) -> None:
         """Fire the ingest hook with no scheduler lock held (lock order is
-        always hook-side-lock -> scheduler-lock, never the reverse)."""
-        if self.on_result is not None:
-            for qid in qids:
+        always hook-side-lock -> scheduler-lock, never the reverse).
+
+        A finished query that bootstraps a subscription is consumed here
+        instead of notified: its result becomes a scheduled ``_DeltaServe``
+        (the subscribe rollback), so subscribers never see the internal
+        query id."""
+        for qid in qids:
+            with self._lock:
+                sub = self._sub_boot.pop(qid, None)
+            if sub is not None:
+                self._bootstrap_subscription(sub, qid)
+                continue
+            if self.on_result is not None:
                 self.on_result(qid)
+
+    def _bootstrap_subscription(self, sub: _Subscription, qid: int) -> None:
+        """The subscription's reduction finished: schedule the bootstrap
+        delta compute, or close the subscription if the reduction errored
+        (or an unsubscribe won the race)."""
+        sr = self.take_result(qid)
+        notify: list[int] = []
+        with self._lock:
+            if sub.state == "closed":
+                pass  # force-unsubscribed while bootstrapping: nothing to do
+            elif sr is None or sr.error is not None:
+                error = "bootstrap result missing" if sr is None else sr.error
+                self.stats.failures += 1
+                notify_id = self._emit(sub, {"kind": CLOSED, "error": error})
+                if notify_id is not None:
+                    notify.append(notify_id)
+            else:
+                item = _DeltaServe(
+                    sub=sub, kind="bootstrap", t0=time.perf_counter(), base=sr
+                )
+                sub.inflight = True
+                self._place_validation(item)  # sharded: pick a device
+                self._validations.append(item)
+        self._fire_deltas(notify)
 
     def _run_validation(self, val: _Validation, done: list[int]) -> None:
         """Execute one revalidation outside the lock and commit the verdict:
@@ -900,6 +1113,336 @@ class DropService:
             self._results[q.query_id] = sr
             done.append(q.query_id)
 
+    def _revalidate_basis(
+        self,
+        grown: np.ndarray,
+        served: ReduceResult,
+        cfg: DropConfig,
+        bucket: ShapeBucketCache,
+    ) -> tuple[bool, int, float]:
+        """Sampled TLB of the SERVED map on the grown data — the same gate
+        ``_validate`` applies to cache hits, reused as the delta protocol's
+        quality check. Returns (passed, pairs_used, tlb_mean)."""
+        v = bucket.pad_basis(served.v, min(grown.shape))
+        est = TLBEstimator(
+            grown,
+            jnp.asarray(v),
+            np.random.default_rng(cfg.seed + 1),
+            confidence=cfg.confidence,
+            use_kernels=cfg.use_kernels,
+            bucket=bucket,
+        )
+        e = est.estimate_at_k(
+            served.k,
+            cfg.target_tlb,
+            initial_pairs=cfg.initial_pairs,
+            max_pairs=cfg.max_pairs,
+        )
+        return e.mean >= cfg.target_tlb, e.pairs_used, float(e.mean)
+
+    def _cold_refit_for(
+        self,
+        sub: _Subscription,
+        grown: np.ndarray,
+        served: ReduceResult,
+        bucket: ShapeBucketCache,
+    ) -> tuple[ReduceResult, object]:
+        """Run a warm-started cold refit to completion for a subscription
+        whose suffix outgrew every incremental path (the same last resort
+        the request/response ladder ends in). Returns (result, tracker)."""
+        sq = sub.query
+        runner = make_reducer(
+            sq.method, grown, sq.cfg, None,
+            warm_prev_k=served.k if served.satisfied else None,
+            bucket=bucket,
+        )
+        while runner.step():
+            pass
+        res = runner.result()
+        tracker = None
+        if self.enable_suffix_update and getattr(
+            runner, "supports_update", False
+        ):
+            try:
+                tracker = runner.tracker()
+            except Exception:
+                tracker = None
+        with self._lock:
+            self.stats.fit_calls += runner.fit_calls
+            self.stats.iterations += len(res.iterations)
+        return res, tracker
+
+    def _apply_delta(self, item: _DeltaServe) -> tuple[dict, dict]:
+        """Device compute for one delta (outside the lock): produce the
+        delta dict plus the subscription-state updates the commit section
+        applies under the lock. The sharded subclass wraps this in the work
+        item's device scope."""
+        if item.kind == "bootstrap":
+            return self._delta_bootstrap(item)
+        return self._delta_append(item)
+
+    def _delta_bootstrap(self, item: _DeltaServe) -> tuple[dict, dict]:
+        """Build the subscribe rollback: transform the dataset through the
+        freshly served map, cold-build the incremental analytics state, and
+        bootstrap the subspace tracker the append gate will merge into."""
+        from repro.analytics.incremental import IncrementalAnalytics
+
+        sub = item.sub
+        sq = sub.query
+        res = item.base.result
+        xt = res.transform(sub.x)
+        analytics = IncrementalAnalytics(
+            xt,
+            eps=sq.eps,
+            min_samples=sq.min_samples,
+            bandwidth=sq.bandwidth,
+            bucket=self._validation_bucket(item),
+        )
+        snap = analytics.snapshot()
+        tracker = None
+        if (
+            sq.method == "pca"
+            and self.enable_suffix_update
+            and res.v.shape[1] > 0
+        ):
+            try:
+                tracker = SubspaceTracker.from_fit(sub.x, res.v)
+            except Exception:
+                tracker = None  # costs the sub its incremental basis path
+        delta = {
+            "kind": ROLLBACK,
+            "reason": "subscribe",
+            "basis": res,
+            "rows": xt,
+            "knn": {"idx": snap.knn_idx, "d2": snap.knn_d2},
+            "labels": snap.labels,
+            "densities": snap.densities,
+            "tlb": res.tlb_estimate,
+            "rotation": 0.0,
+            "wall_s": time.perf_counter() - item.t0,
+        }
+        updates = {
+            "x": sub.x,
+            "result": res,
+            "tracker": tracker,
+            "analytics": analytics,
+            "rollback": True,
+            "pairs": 0,
+            "cache_put": None,
+        }
+        return delta, updates
+
+    def _delta_append(self, item: _DeltaServe) -> tuple[dict, dict]:
+        """Fold queued suffixes into the served state through the delta
+        escalation ladder:
+
+        1. merge the suffix into the subspace tracker (pure, O(suffix)) and
+           read the rotation signal against the SERVED basis;
+        2. rotation stable -> TLB-revalidate the served map on the grown
+           data (the PR 3 gate); a pass emits an ``append`` delta — suffix
+           transform + incremental analytics, all O(s*m);
+        3. gate failed -> O(suffix) TLB-gated suffix update
+           (``core.subspace``), a satisfying merge emits a ``rollback``
+           (reason drift/headroom: the basis moved, downstream rebuilt);
+        4. even that unsatisfied -> warm cold refit, ``rollback`` with
+           reason "refit" — the same last resort as the query ladder.
+
+        The subscription's fields are read without the lock: only the delta
+        chain mutates them and at most one item per sub is in flight."""
+        sub = item.sub
+        sq = sub.query
+        served = sub.result
+        suffix = (
+            item.suffixes[0]
+            if len(item.suffixes) == 1
+            else np.concatenate(item.suffixes)
+        )
+        grown = np.concatenate([sub.x, suffix])
+        bucket = self._validation_bucket(item)
+        m_old = sub.x.shape[0]
+        pairs = 0
+        rot = 0.0
+        merged = None
+        stable = False
+        tlb_mean = served.tlb_estimate
+        if sub.tracker is not None:
+            cap = max(
+                1,
+                min(
+                    grown.shape[1], grown.shape[0],
+                    sub.tracker.width + TRACK_HEADROOM,
+                ),
+            )
+            merged = sub.tracker.merge(suffix, cap)
+            rot = merged.rotation_from(served.v)
+        if merged is None or rot <= sq.rotation_tol:
+            stable, pairs, tlb_mean = self._revalidate_basis(
+                grown, served, sq.cfg, bucket
+            )
+        cacheable = self.enable_cache and method_cacheable(sq.method)
+        if stable:
+            # O(suffix) append: old transformed rows stay valid (row-wise
+            # transform => bit-identical to transforming the grown dataset),
+            # downstream state folds the suffix in incrementally
+            xt_suf = served.transform(suffix)
+            patch = sub.analytics.append(xt_suf)
+            snap = sub.analytics.snapshot()
+            tracker_new = sub.tracker
+            if merged is not None:
+                keep = min(merged.width, served.k + TRACK_HEADROOM)
+                tracker_new = SubspaceTracker(
+                    v=np.ascontiguousarray(merged.v[:, :keep]),
+                    s=np.ascontiguousarray(merged.s[:keep]),
+                    mean=merged.mean,
+                    rows=merged.rows,
+                )
+            delta = {
+                "kind": APPEND,
+                "base_rows": m_old,
+                "rows": xt_suf,
+                "knn": {
+                    "changed": patch["changed"],
+                    "idx": patch["idx"],
+                    "d2": patch["d2"],
+                    "append_idx": patch["append_idx"],
+                    "append_d2": patch["append_d2"],
+                },
+                "labels": snap.labels,
+                "densities": snap.densities,
+                "tlb": tlb_mean,
+                "rotation": rot,
+                "wall_s": time.perf_counter() - item.t0,
+            }
+            cache_put = None
+            if cacheable:
+                # re-register the (still valid) map under the grown
+                # fingerprint, updater state folded in: plain queries on
+                # the same stream keep hitting the cache
+                cache_put = (
+                    dataset_fingerprint(grown),
+                    BasisCacheEntry(
+                        v=served.v, mean=served.mean, k=served.k,
+                        target_tlb=sq.cfg.target_tlb,
+                        tlb_estimate=tlb_mean, satisfied=True,
+                        method=sq.method, rows=grown.shape[0],
+                        tracker=tracker_new,
+                    ),
+                )
+            updates = {
+                "x": grown,
+                "result": served,
+                "tracker": tracker_new,
+                "analytics": sub.analytics,
+                "rollback": False,
+                "pairs": pairs,
+                "cache_put": cache_put,
+            }
+            return delta, updates
+        # basis must move: escalate exactly like the query ladder
+        res_new, tracker_new = None, None
+        reason = "drift" if merged is not None and rot > sq.rotation_tol \
+            else "headroom"
+        if merged is not None:
+            try:
+                tracker_new, res2, p2 = subspace_suffix_update(
+                    sub.tracker, grown, sq.cfg, bucket=bucket
+                )
+                pairs += p2
+                if res2.satisfied:
+                    res_new = res2
+            except Exception:
+                res_new, tracker_new = None, None
+        if res_new is None:
+            reason = "refit"
+            res_new, tracker_new = self._cold_refit_for(
+                sub, grown, served, bucket
+            )
+        xt = res_new.transform(grown)
+        sub.analytics.rebuild(xt)
+        snap = sub.analytics.snapshot()
+        delta = {
+            "kind": ROLLBACK,
+            "reason": reason,
+            "basis": res_new,
+            "rows": xt,
+            "knn": {"idx": snap.knn_idx, "d2": snap.knn_d2},
+            "labels": snap.labels,
+            "densities": snap.densities,
+            "tlb": res_new.tlb_estimate,
+            "rotation": rot,
+            "wall_s": time.perf_counter() - item.t0,
+        }
+        cache_put = None
+        if cacheable and res_new.satisfied:
+            cache_put = (
+                dataset_fingerprint(grown),
+                BasisCacheEntry(
+                    v=res_new.v, mean=res_new.mean, k=res_new.k,
+                    target_tlb=sq.cfg.target_tlb,
+                    tlb_estimate=res_new.tlb_estimate, satisfied=True,
+                    method=sq.method, rows=grown.shape[0],
+                    tracker=tracker_new,
+                ),
+            )
+        updates = {
+            "x": grown,
+            "result": res_new,
+            "tracker": tracker_new,
+            "analytics": sub.analytics,
+            "rollback": True,
+            "pairs": pairs,
+            "cache_put": cache_put,
+        }
+        return delta, updates
+
+    def _run_delta(self, item: _DeltaServe, done: list[int]) -> None:
+        """Execute one delta compute outside the lock and commit: apply the
+        subscription-state updates, emit the delta (dropped if an
+        unsubscribe closed the sub mid-flight), chain the next queued
+        append, and honor a deferred close. A raising compute emits a final
+        ``closed`` delta with the error — subscriptions fail loudly, never
+        silently stall."""
+        sub = item.sub
+        delta, updates, error = None, None, None
+        try:
+            delta, updates = self._apply_delta(item)
+        except Exception as exc:
+            error = f"{type(exc).__name__}: {exc}"
+        notify: list[int] = []
+        with self._lock:
+            self._stepping_now.remove(item)
+            sub.inflight = False
+            if error is not None:
+                self.stats.failures += 1
+                nid = self._emit(sub, {"kind": CLOSED, "error": error})
+                if nid is not None:
+                    notify.append(nid)
+            elif sub.state != "closed":
+                self.stats.validation_pairs += updates["pairs"]
+                sub.x = updates["x"]
+                sub.result = updates["result"]
+                sub.tracker = updates["tracker"]
+                sub.analytics = updates["analytics"]
+                if sub.state == "pending":
+                    sub.state = "live"
+                if item.kind != "bootstrap":
+                    if updates["rollback"]:
+                        self.stats.rollbacks += 1
+                    else:
+                        self.stats.delta_serves += 1
+                if updates["cache_put"] is not None:
+                    self.cache.put(*updates["cache_put"])
+                nid = self._emit(sub, delta)
+                if nid is not None:
+                    notify.append(nid)
+                if sub.close_requested:
+                    nid = self._emit(sub, {"kind": CLOSED, "error": None})
+                    if nid is not None:
+                        notify.append(nid)
+                else:
+                    self._maybe_schedule_delta(sub)
+        self._fire_deltas(notify)
+
     def _poll_once(self) -> tuple[bool, bool]:
         """One scheduler tick. Returns (stepped, work_remains)."""
         with self._lock:
@@ -912,7 +1455,9 @@ class DropService:
             return False, more
         done: list[int] = []
         try:
-            if isinstance(work, _Downstream):
+            if isinstance(work, _DeltaServe):
+                self._run_delta(work, done)
+            elif isinstance(work, _Downstream):
                 self._run_downstream(work, done)
             elif isinstance(work, _SuffixUpdate):
                 self._run_suffix_update(work, done)
@@ -950,12 +1495,39 @@ class DropService:
             self._done_now.clear()
             more = self._work_remains()
         self._notify(done)
+        if done:
+            # _notify may have SCHEDULED work (a finished bootstrap query
+            # becomes a _DeltaServe item there) after `more` was computed —
+            # re-check so run()/drain loops don't exit with it pending
+            with self._lock:
+                more = more or self._work_remains()
         return True, more
 
     def _abandon(self, work, exc: BaseException, done: list[int]) -> None:
         """Finish ``work``'s query with an error after a scheduler-side
         exception left it in an unknown state (see ``_poll_once``). The
         query is failed only if nothing else already produced its result."""
+        if isinstance(work, _DeltaServe):
+            # no query to fail: close the subscription with the error so a
+            # blocked delta waiter wakes instead of waiting forever
+            sub = work.sub
+            notify: list[int] = []
+            with self._lock:
+                if work in self._stepping_now:
+                    self._stepping_now.remove(work)
+                self.stats.failures += 1
+                sub.inflight = False
+                nid = self._emit(
+                    sub,
+                    {
+                        "kind": CLOSED,
+                        "error": f"scheduler: {type(exc).__name__}: {exc}",
+                    },
+                )
+                if nid is not None:
+                    notify.append(nid)
+            self._fire_deltas(notify)
+            return
         q = work.query
         with self._lock:
             if work in self._stepping_now:

@@ -177,6 +177,13 @@ class ShardedDropService(DropService):
         with jax.default_device(upd.device or self.devices[0]):
             return super()._apply_suffix_update(upd)
 
+    def _apply_delta(self, item):
+        # delta computes (transform + rectangular pairwise scans + TLB
+        # gates) are device compute: pin them to the item's assigned device
+        # so subscription traffic load-balances like validations do
+        with jax.default_device(item.device or self.devices[0]):
+            return super()._apply_delta(item)
+
     def _apply_downstream(self, ds):
         # mesh fan-out claims the whole mesh by construction (shard_map
         # places one dataset-shard partial per device), so the work item's

@@ -1,0 +1,377 @@
+"""Streaming delta-serving subsystem: pub/sub subscriptions with O(suffix)
+appends (serve_drop.delta + analytics.incremental).
+
+The protocol contract under test, layer by layer:
+
+* **incremental analytics** — ``IncrementalAnalytics.append`` folds suffix
+  rows in via rectangular suffix-x-all scans; kNN indices/distances and
+  DBSCAN labels must be BIT-identical to a cold recompute over the same
+  reduced rows at every (non-tile-aligned) cut, KDE densities equal to
+  compensated-sum tolerance.
+* **the delta ladder** — a subscription's first delta is the bootstrap
+  rollback; drift-free appends ride the O(suffix) append path (TLB-gated,
+  rotation-stable); injected drift forces a rollback whose restated state
+  is parity-checked like any other.
+* **ordering/termination** — deltas are sequence-numbered, delivered in
+  order at most once; ``unsubscribe`` delivers a terminal ``closed`` delta
+  after which every mutation raises ``SubscriptionClosed``.
+* **transport** — the same subscription surface works through the threaded
+  ingest front-end (blocking ``next_delta``) and the sharded scheduler.
+
+Parity is stated in two layers on purpose: analytics are bit-exact against
+a cold recompute over the rows the subscriber actually holds, while the
+suffix-assembled transform matches a one-shot transform of the grown
+matrix to float32 tolerance only (BLAS kernels are size-dependent, so the
+piecewise and full products differ in ulps). The hypothesis sweep of the
+same property lives in test_properties_serve.py (skipped without
+hypothesis); the deterministic random-sequence sweep here covers
+environments without it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analytics import (
+    IncrementalAnalytics,
+    dbscan,
+    pairwise_kde,
+    pairwise_knn,
+)
+from repro.core import DropConfig
+from repro.data import sinusoid_mixture
+from repro.serve_drop import (
+    APPEND,
+    CLOSED,
+    ROLLBACK,
+    DropService,
+    IngestFrontend,
+    ShardedDropService,
+    SubscribeQuery,
+    SubscriberState,
+    SubscriptionClosed,
+)
+
+CFG = DropConfig(target_tlb=0.95, seed=0)
+EPS = 1.0
+MIN_SAMPLES = 5
+BANDWIDTH = 1.0
+
+
+def _stream(m_total=420, d=32, rank=3, seed=0):
+    """One generative process; snapshots are prefixes (append-only)."""
+    return sinusoid_mixture(m_total, d, rank=rank, seed=seed)[0]
+
+
+def _drain(svc):
+    while svc.poll():
+        pass
+
+
+def _query(x0, rotation_tol=0.25):
+    return SubscribeQuery(
+        x=x0, cfg=CFG, eps=EPS, min_samples=MIN_SAMPLES,
+        bandwidth=BANDWIDTH, rotation_tol=rotation_tol,
+    )
+
+
+def _apply_all(svc, sid, client):
+    """Drain the scheduler and fold every emitted delta into the client."""
+    _drain(svc)
+    got = svc.poll_deltas(sid)
+    for d in got:
+        client.apply(d)
+    return got
+
+
+def _assert_state_parity(client, grown):
+    """The two-layer delta-parity contract (see module docstring)."""
+    idx, d2 = pairwise_knn(client.rows)
+    assert np.array_equal(client.knn_idx, np.asarray(idx))
+    assert np.array_equal(client.knn_d2, np.asarray(d2))
+    labels = dbscan(client.rows, EPS, MIN_SAMPLES)
+    assert np.array_equal(client.labels, np.asarray(labels))
+    dens = pairwise_kde(client.rows, None, BANDWIDTH)
+    np.testing.assert_allclose(
+        client.densities, np.asarray(dens), atol=1e-5
+    )
+    assert client.rows.dtype == np.float32
+    np.testing.assert_allclose(
+        client.rows, client.basis.transform(grown), atol=1e-4
+    )
+
+
+# ------------------------------------------ incremental analytics (unit)
+
+
+@pytest.mark.parametrize("block", [64, 1024])
+def test_incremental_analytics_bit_parity_at_awkward_cuts(block):
+    """Appends at non-tile-aligned cuts: incremental kNN/DBSCAN state is
+    bit-identical to a cold rebuild over the grown rows, KDE to f64-fold
+    tolerance."""
+    rng = np.random.default_rng(3)
+    y = rng.normal(size=(301, 6)).astype(np.float32)
+    inc = IncrementalAnalytics(
+        y[:120], eps=EPS, min_samples=MIN_SAMPLES, bandwidth=BANDWIDTH,
+        block=block,
+    )
+    for cut in (137, 181, 240, 301):
+        inc.append(y[inc.rows: cut])
+        snap = inc.snapshot()
+        cold = IncrementalAnalytics(
+            y[:cut], eps=EPS, min_samples=MIN_SAMPLES, bandwidth=BANDWIDTH,
+            block=block,
+        ).snapshot()
+        assert np.array_equal(snap.knn_idx, cold.knn_idx)
+        assert np.array_equal(snap.knn_d2, cold.knn_d2)
+        assert np.array_equal(snap.labels, cold.labels)
+        np.testing.assert_allclose(
+            snap.densities, cold.densities, atol=1e-6
+        )
+
+
+def test_incremental_append_patch_is_o_suffix_shaped():
+    """The append patch carries only changed old rows + the new rows —
+    the O(suffix) wire contract SubscriberState folds in."""
+    y = np.random.default_rng(0).normal(size=(200, 5)).astype(np.float32)
+    inc = IncrementalAnalytics(y[:150], eps=EPS)
+    patch = inc.append(y[150:])
+    assert patch["append_idx"].shape == (50,)
+    assert patch["append_d2"].shape == (50,)
+    assert patch["changed"].shape == patch["idx"].shape
+    assert patch["changed"].size <= 150  # only old rows whose NN moved
+
+
+# --------------------------------------------------- service delta ladder
+
+
+def test_bootstrap_then_stable_appends_with_parity():
+    """Drift-free stream: one bootstrap rollback, then every append rides
+    the O(suffix) path; subscriber state parity after every delta."""
+    x = _stream(420)
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:300]))
+    client = SubscriberState()
+    got = _apply_all(svc, sid, client)
+    assert [d["kind"] for d in got] == [ROLLBACK]
+    assert got[0]["reason"] == "subscribe"
+    assert got[0]["seq"] == 0
+    _assert_state_parity(client, x[:300])
+    for lo, hi in ((300, 340), (340, 393), (393, 420)):
+        svc.append(sid, x[lo:hi])
+        got = _apply_all(svc, sid, client)
+        assert [d["kind"] for d in got] == [APPEND]
+        _assert_state_parity(client, x[:hi])
+    assert client.appends == 3 and client.rollbacks == 1
+    assert svc.stats.subscriptions == 1
+    assert svc.stats.delta_serves == 3
+    assert svc.stats.rollbacks == 0
+    assert svc.stats.failures == 0
+
+
+def test_drift_injection_forces_rollback_with_parity():
+    """Rows from a different generative process (scaled novel directions)
+    must rotate the basis past the gate: the subscriber sees a rollback
+    (never a silently degraded append) and the restated state is
+    parity-checked like any other."""
+    x = _stream(360)
+    drift = 5.0 * _stream(80, seed=9)[:, ::-1].copy()
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:360], rotation_tol=0.2))
+    client = SubscriberState()
+    _apply_all(svc, sid, client)
+    svc.append(sid, drift)
+    got = _apply_all(svc, sid, client)
+    assert [d["kind"] for d in got] == [ROLLBACK]
+    assert got[0]["reason"] in ("drift", "headroom", "refit")
+    grown = np.concatenate([x[:360], drift.astype(np.float32)])
+    _assert_state_parity(client, grown)
+    assert svc.stats.rollbacks == 1
+    # the stream keeps going after a rollback: the refit state serves the
+    # next (drift-free w.r.t. the NEW basis) append
+    svc.append(sid, 5.0 * _stream(120, seed=9)[80:, ::-1].copy())
+    got = _apply_all(svc, sid, client)
+    assert len(got) == 1 and got[0]["kind"] in (APPEND, ROLLBACK)
+    assert client.rows.shape[0] == 480
+
+
+def test_deltas_are_ordered_at_most_once_and_replay_rejected():
+    """poll pops (at-most-once); seq is contiguous; a replayed or reordered
+    delta is a protocol violation the reference client rejects."""
+    x = _stream(340)
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:300]))
+    _drain(svc)
+    svc.append(sid, x[300:320])
+    _drain(svc)
+    svc.append(sid, x[320:340])
+    _drain(svc)
+    got = svc.poll_deltas(sid)
+    assert [d["seq"] for d in got] == list(range(len(got)))
+    assert svc.poll_deltas(sid) == []  # popped: delivered at most once
+    client = SubscriberState()
+    for d in got:
+        client.apply(d)
+    with pytest.raises(ValueError, match="out-of-order"):
+        client.apply(got[-1])  # replay
+    fresh = SubscriberState()
+    with pytest.raises(ValueError, match="out-of-order"):
+        fresh.apply(got[-1])  # skipped bootstrap
+
+
+def test_unsubscribe_terminates_and_further_mutation_raises():
+    x = _stream(320)
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:300]))
+    client = SubscriberState()
+    _apply_all(svc, sid, client)
+    svc.append(sid, x[300:320])
+    svc.unsubscribe(sid)  # orderly: the queued suffix may drop, but the
+    _drain(svc)           # terminal closed must still arrive
+    got = svc.poll_deltas(sid)
+    assert got and got[-1]["kind"] == CLOSED
+    assert got[-1]["error"] is None
+    for d in got:
+        client.apply(d)
+    assert client.closed
+    assert sid not in svc.live_subscriptions()
+    with pytest.raises(SubscriptionClosed):
+        svc.append(sid, x[300:320])
+    with pytest.raises(SubscriptionClosed):
+        client.apply({"kind": APPEND, "seq": client._next_seq})
+
+
+def test_pending_unsubscribe_before_bootstrap_still_closes():
+    """Unsubscribing while the bootstrap reduction is still queued must
+    not strand the subscription in pending."""
+    x = _stream(300)
+    svc = DropService()
+    sid = svc.subscribe(_query(x))
+    svc.unsubscribe(sid, force=True)
+    _drain(svc)
+    got = svc.poll_deltas(sid)
+    assert got[-1]["kind"] == CLOSED
+    assert sid not in svc.live_subscriptions()
+
+
+# ------------------------------------------------ random-sequence sweep
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_append_sequence_matches_cold_recompute(seed):
+    """Deterministic sweep (hypothesis mirror): random-size appends with a
+    drift injection at a random step; after EVERY delta the subscriber
+    state satisfies the two-layer parity contract — including across the
+    forced rollback."""
+    rng = np.random.default_rng(100 + seed)
+    x = _stream(560, seed=seed)
+    m0 = 300
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:m0], rotation_tol=0.2))
+    client = SubscriberState()
+    got = _apply_all(svc, sid, client)
+    assert [d["kind"] for d in got] == [ROLLBACK]
+    grown = x[:m0]
+    _assert_state_parity(client, grown)
+    lo = m0
+    drift_step = int(rng.integers(0, 4))
+    for step in range(4):
+        if step == drift_step:
+            suffix = 4.0 * _stream(
+                int(rng.integers(20, 60)), seed=77 + seed
+            )[:, ::-1].copy()
+        else:
+            s = int(rng.integers(11, 64))
+            suffix = x[lo: lo + s]
+            lo += suffix.shape[0]
+        svc.append(sid, suffix)
+        grown = np.concatenate([grown, suffix.astype(np.float32)])
+        got = _apply_all(svc, sid, client)
+        assert len(got) == 1 and got[0]["kind"] in (APPEND, ROLLBACK)
+        _assert_state_parity(client, grown)
+    assert client.rows.shape[0] == grown.shape[0]
+    assert client.rollbacks >= 2  # bootstrap + the drift injection
+    assert svc.stats.failures == 0
+
+
+# ------------------------------------------------------------ transports
+
+
+def test_ingest_frontend_blocking_next_delta():
+    """The threaded front-end: subscribe/append from the client thread,
+    block on next_delta; unsubscribe delivers the terminal closed and
+    subsequent waits raise SubscriptionClosed."""
+    x = _stream(360)
+    svc = DropService()
+    with IngestFrontend(svc, queue_capacity=8) as fe:
+        sid = fe.subscribe(x[:300], CFG, eps=EPS)
+        client = SubscriberState()
+        d = fe.next_delta(sid, timeout=120)
+        client.apply(d)
+        assert d["kind"] == ROLLBACK and d["reason"] == "subscribe"
+        with pytest.raises(TimeoutError):
+            fe.next_delta(sid, timeout=0.05)  # nothing pending
+        fe.append(sid, x[300:360])
+        d = fe.next_delta(sid, timeout=120)
+        client.apply(d)
+        assert d["kind"] in (APPEND, ROLLBACK)
+        _assert_state_parity(client, x[:360])
+        fe.unsubscribe(sid)
+        d = fe.next_delta(sid, timeout=120)
+        assert d["kind"] == CLOSED
+        client.apply(d)
+        with pytest.raises(SubscriptionClosed):
+            fe.next_delta(sid, timeout=120)
+
+
+def test_frontend_close_terminates_live_subscriptions():
+    """close(drain=True) with a live subscription: the subscriber gets a
+    terminal closed delta and no waiter is left stranded."""
+    x = _stream(300)
+    svc = DropService()
+    fe = IngestFrontend(svc, queue_capacity=8).start()
+    sid = fe.subscribe(x, CFG)
+    fe.next_delta(sid, timeout=120)  # bootstrap landed
+    fe.close(drain=True)
+    got = svc.poll_deltas(sid)
+    assert got and got[-1]["kind"] == CLOSED
+    assert sid not in svc.live_subscriptions()
+
+
+def test_sharded_single_device_subscription_parity():
+    """The sharded scheduler's delta path (device-pinned compute) serves
+    the same contract; with one device it degenerates to the base class."""
+    x = _stream(360)
+    svc = ShardedDropService(devices=1)
+    sid = svc.subscribe(_query(x[:300]))
+    client = SubscriberState()
+    got = _apply_all(svc, sid, client)
+    assert [d["kind"] for d in got] == [ROLLBACK]
+    svc.append(sid, x[300:360])
+    got = _apply_all(svc, sid, client)
+    assert [d["kind"] for d in got] == [APPEND]
+    _assert_state_parity(client, x[:360])
+    svc.unsubscribe(sid)
+    _drain(svc)
+    assert svc.poll_deltas(sid)[-1]["kind"] == CLOSED
+
+
+def test_subscriptions_and_queries_share_the_scheduler():
+    """Plain request/response queries interleave with subscription deltas
+    on the same scheduler without starving either."""
+    from repro.core.cost import zero_cost
+
+    x = _stream(380)
+    other = _stream(240, seed=5)
+    svc = DropService()
+    sid = svc.subscribe(_query(x[:300]))
+    qid = svc.submit(other, CFG, zero_cost())
+    client = SubscriberState()
+    _apply_all(svc, sid, client)
+    svc.append(sid, x[300:380])
+    qid2 = svc.submit(other, CFG, zero_cost())
+    _apply_all(svc, sid, client)
+    assert client.rows.shape[0] == 380
+    for q in (qid, qid2):
+        r = svc.take_result(q)
+        assert r is not None and r.error is None
+    assert svc.stats.subscriptions == 1

@@ -204,6 +204,52 @@ def test_wedged_scheduler_does_not_hang_close(monkeypatch):
     assert not fe._threads  # drain threads joined, none died early
 
 
+def test_wedged_scheduler_close_terminates_live_subscription(monkeypatch):
+    """Satellite of the wedge regression above: close(drain=True) with a
+    LIVE delta subscription must terminate deterministically even when
+    every scheduler tick raises — the subscriber gets a final ``closed``
+    delta and a blocked ``next_delta`` waiter is released, not stranded."""
+    from repro.serve_drop import SubscriptionClosed
+
+    svc = DropService()
+    fe = IngestFrontend(svc, queue_capacity=4)
+    fe.start()
+    x = _datasets(1)[0]
+    sid = fe.subscribe(x, CFG)
+    boot = fe.next_delta(sid, timeout=120)  # subscription is live
+    assert boot["kind"] == "rollback"
+
+    def always_raises():
+        raise RuntimeError("wedged scheduler tick")
+
+    monkeypatch.setattr(svc, "_poll_once", always_raises)
+    fe.append(sid, x[:16])  # queued work the wedged scheduler cannot serve
+
+    seen = []
+
+    def waiter():
+        try:
+            while True:
+                seen.append(fe.next_delta(sid, timeout=30))
+        except (SubscriptionClosed, TimeoutError) as exc:
+            seen.append(type(exc).__name__)
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)  # waiter parks on the delta condition
+    t0 = time.perf_counter()
+    fe.close(drain=True, progress_deadline_s=0.3)  # must RETURN
+    assert time.perf_counter() - t0 < 10.0
+    th.join(timeout=10)
+    assert not th.is_alive()  # the waiter was released
+    kinds = [d["kind"] if isinstance(d, dict) else d for d in seen]
+    # the terminal closed was either consumed by the waiter before it saw
+    # SubscriptionClosed, or the close raced it and the waiter saw the
+    # terminal state directly — both are deterministic termination
+    assert "SubscriptionClosed" in kinds or "closed" in kinds
+    assert sid not in svc.live_subscriptions()
+
+
 def test_commit_failure_fails_query_with_error_result(monkeypatch):
     """A raise in the commit section (after compute, e.g. cache put /
     stats bookkeeping) must finish the query with a ``scheduler:`` error

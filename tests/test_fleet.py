@@ -295,3 +295,79 @@ def test_ingest_frontend_over_fleet():
         results = [fe.result(q, timeout=120) for q in qids]
     assert all(r.error is None for r in results)
     assert all(r.worker in ("worker-0", "worker-1") for r in results)
+
+
+def test_fleet_subscription_round_trip():
+    """Pub/sub across the process boundary: subscribe homes the tenant on
+    a worker, deltas stream back through the supervisor read loop with
+    supervisor-stamped contiguous seq, and unsubscribe delivers the
+    terminal closed — the same protocol the in-process service serves
+    (test_delta_serve.py pins its parity)."""
+    from repro.serve_drop import (
+        SubscribeQuery,
+        SubscriberState,
+        SubscriptionClosed,
+    )
+
+    x = sinusoid_mixture(200, 16, rank=3, seed=4)[0]
+    client = SubscriberState()
+    with FleetSupervisor(workers=1, profile=False) as fleet:
+        sid = fleet.subscribe(SubscribeQuery(x=x[:150], cfg=CFG, eps=1.0))
+
+        def next_delta(timeout_s=120.0):
+            out = []
+            _wait(lambda: out.extend(fleet.poll_deltas(sid, max_n=1)) or out,
+                  timeout_s, "delta")
+            return out[0]
+
+        boot = next_delta()
+        client.apply(boot)
+        assert boot["kind"] == "rollback" and boot["reason"] == "subscribe"
+        assert client.rows.shape[0] == 150
+        fleet.append(sid, x[150:])
+        d = next_delta()
+        client.apply(d)
+        assert d["kind"] in ("append", "rollback")
+        assert client.rows.shape[0] == 200
+        np.testing.assert_allclose(
+            client.rows, client.basis.transform(x), atol=1e-4
+        )
+        assert fleet.stats.subscriptions == 1
+        fleet.unsubscribe(sid)
+        d = next_delta()
+        client.apply(d)
+        assert d["kind"] == "closed" and client.closed
+        assert sid not in fleet.live_subscriptions()
+        with pytest.raises(SubscriptionClosed):
+            fleet.append(sid, x[:8])
+
+
+def test_fleet_worker_death_closes_homed_subscriptions():
+    """A killed worker's subscription state is unrecoverable (it lives in
+    the worker's process memory), so unlike stateless queries it cannot be
+    requeued on a survivor: the supervisor must close every homed
+    subscription with an error-carrying terminal delta instead of leaving
+    waiters hanging."""
+    from repro.serve_drop import SubscribeQuery, SubscriptionClosed
+
+    x = sinusoid_mixture(160, 16, rank=3, seed=4)[0]
+    with FleetSupervisor(workers=2, profile=False) as fleet:
+        sid = fleet.subscribe(SubscribeQuery(x=x, cfg=CFG, eps=1.0))
+        out = []
+        _wait(lambda: out.extend(fleet.poll_deltas(sid)) or out,
+              timeout_s=120.0, what="bootstrap delta")
+        assert out[0]["kind"] == "rollback"
+        home = fleet._subs[sid].worker
+        os.kill(fleet._workers[home].proc.pid, signal.SIGKILL)
+        term = []
+        _wait(lambda: term.extend(fleet.poll_deltas(sid)) or term,
+              timeout_s=120.0, what="terminal delta after worker death")
+        assert term[-1]["kind"] == "closed"
+        assert term[-1]["error"]  # the death reason travels to the client
+        assert sid not in fleet.live_subscriptions()
+        with pytest.raises(SubscriptionClosed):
+            fleet.append(sid, x[:8])
+        # the supervisor itself stays healthy: the slot restarts and the
+        # fleet keeps serving plain queries
+        res = fleet.result(fleet.submit(_datasets(1)[0], CFG), timeout=120)
+        assert res.error is None

@@ -209,3 +209,48 @@ def test_suffix_update_tlb_matches_refit_property(m0, rank, pct, seed):
     tlb_fit, _, _ = transform_tlb_sampled(grown, rr.transform(grown), pairs)
     assert res.v.dtype == np.float32  # float32 contract under sweep too
     assert tlb_upd >= tlb_fit - 0.005, (m0, rank, pct, tlb_upd, tlb_fit)
+
+
+# ------------------------------------------------ incremental analytics
+
+
+@given(
+    st.integers(30, 90),
+    st.lists(st.integers(1, 25), min_size=1, max_size=4),
+    st.integers(2, 8),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_incremental_analytics_matches_cold_after_every_append(
+    m0, cuts, k, seed
+):
+    """The delta protocol's downstream half, swept over random append
+    sequences: after EVERY append, the incrementally maintained kNN
+    indices/distances and DBSCAN labels are BIT-identical to a cold
+    rebuild over the grown rows, and KDE densities match to the f64
+    compensated-fold tolerance. Block size 17 forces non-tile-aligned
+    suffix boundaries on every step. The deterministic mirror (through
+    the full DropService subscription ladder, rollbacks included) lives
+    in test_delta_serve.py."""
+    from repro.analytics import IncrementalAnalytics
+
+    rng = np.random.default_rng(seed)
+    total = m0 + sum(cuts)
+    y = rng.normal(size=(total, k)).astype(np.float32)
+    inc = IncrementalAnalytics(
+        y[:m0], eps=1.0, min_samples=4, bandwidth=1.0, block=17
+    )
+    lo = m0
+    for s in cuts:
+        inc.append(y[lo: lo + s])
+        lo += s
+        snap = inc.snapshot()
+        cold = IncrementalAnalytics(
+            y[:lo], eps=1.0, min_samples=4, bandwidth=1.0, block=17
+        ).snapshot()
+        assert np.array_equal(snap.knn_idx, cold.knn_idx)
+        assert np.array_equal(snap.knn_d2, cold.knn_d2)
+        assert np.array_equal(snap.labels, cold.labels)
+        np.testing.assert_allclose(
+            snap.densities, cold.densities, atol=1e-6
+        )

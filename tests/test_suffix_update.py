@@ -324,3 +324,74 @@ def test_suffix_update_served_transform_is_float32():
     assert entry.tracker.v.dtype == np.float32
     assert entry.tracker.s.dtype == np.float32
     assert entry.tracker.mean.dtype == np.float32
+
+
+# --------------------------------------------- headroom exhaustion gate
+
+
+def test_full_width_gate_clear_is_reported_unsatisfied(monkeypatch):
+    """Regression: a gate that only clears the target at the FULL tracked
+    width is serving the merge's least-converged trailing columns with
+    zero margin — quality then degrades silently append over append. The
+    update must report unsatisfied so callers fall back to a warm refit
+    (and delta subscribers see a rollback), never serve the zero-margin
+    map."""
+    from repro.core import subspace as subspace_mod
+
+    base, grown = _staged_rank_stream()
+    r = reduce(base, "pca", CFG, zero_cost())
+    tr = SubspaceTracker.from_fit(base, r.v)
+
+    def clears_only_at_full_width(est, target, w, cfg):
+        return w, 0.99, True, 64  # (k, tlb_mean, satisfied, pairs)
+
+    monkeypatch.setattr(
+        subspace_mod, "_binary_search", clears_only_at_full_width
+    )
+    _, res, _ = suffix_update(tr, grown, CFG)
+    assert res.k >= 1
+    assert not res.satisfied  # zero headroom left => treated as exhausted
+
+
+def test_full_space_width_keeps_satisfied(monkeypatch):
+    """The carve-out: when the tracked width already spans min(m, d), no
+    refit could find more directions — a full-width clear IS the best
+    answer and must stay satisfied."""
+    from repro.core import subspace as subspace_mod
+
+    x = _stream(m_total=300, d=6, rank=3)  # d=6 < k + TRACK_HEADROOM
+    r = reduce(x[:240], "pca", CFG, zero_cost())
+    tr = SubspaceTracker.from_fit(x[:240], r.v)
+
+    def clears_only_at_full_width(est, target, w, cfg):
+        return w, 0.99, True, 64
+
+    monkeypatch.setattr(
+        subspace_mod, "_binary_search", clears_only_at_full_width
+    )
+    _, res, _ = suffix_update(tr, x, CFG)
+    assert res.k == min(x.shape)  # the stub clears only at full width
+    assert res.satisfied
+
+
+def test_novel_direction_stream_never_serves_degraded_map():
+    """End-to-end: appended rows that open MORE novel directions than a
+    zero-headroom tracker can absorb must end in a refit-quality result —
+    the service path may not serve the saturated merge as satisfied."""
+    base, grown = _staged_rank_stream()
+    r = reduce(base, "pca", CFG, zero_cost())
+    tr = SubspaceTracker.from_fit(base, r.v)
+    _, res, _ = suffix_update(tr, grown, CFG, headroom=0)
+    # cap_w == tracker.width: the novel directions cannot fit, so either
+    # the gate fails outright or clears only at the saturated width —
+    # both must surface as unsatisfied (the caller's refit trigger)
+    assert not res.satisfied
+    # the service ladder turns that verdict into a warm refit that DOES
+    # satisfy the target on the grown data
+    svc = DropService(suffix_budget=0.0)
+    svc.submit(base, CFG, zero_cost())
+    svc.run()
+    svc.submit(grown, CFG, zero_cost())
+    out = svc.run()[0]
+    assert out.error is None
+    assert out.result.satisfied
